@@ -1,0 +1,103 @@
+"""Shared benchmark substrate: train (and cache) the tiny draft/target pair
+used by every generation benchmark, mirroring the paper's Llama-68M/7B
+setup at container scale."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.configs import REGISTRY, get_smoke_config
+from repro.data import synthetic
+from repro.models import model as M
+from repro.train import loop as TL
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+V = synthetic.VOCAB
+
+
+def target_cfg():
+    return get_smoke_config("yi-6b", vocab=V,
+                            n_layers=2, d_model=128, d_ff=256, n_heads=4,
+                            n_kv_heads=2, head_dim=32)
+
+
+def draft_cfg():
+    return get_smoke_config("yi-6b", vocab=V,
+                            n_layers=1, d_model=64, d_ff=128, n_heads=2,
+                            n_kv_heads=2, head_dim=32)
+
+
+def corpus():
+    return synthetic.SyntheticCorpus()
+
+
+def train_pair(steps: int = 300, *, force: bool = False, verbose=False
+               ) -> Tuple:
+    """Train draft+target on the synthetic corpus; cached to artifacts/."""
+    os.makedirs(ART, exist_ok=True)
+    tcfg, dcfg = target_cfg(), draft_cfg()
+    tpath = os.path.join(ART, "bench_target.npz")
+    dpath = os.path.join(ART, "bench_draft.npz")
+    cp = corpus()
+    stream = synthetic.token_stream(cp, 400)
+    if not force and os.path.exists(tpath) and os.path.exists(dpath):
+        t_like = M.init_params(jax.random.key(0), tcfg)
+        d_like = M.init_params(jax.random.key(1), dcfg)
+        return (tcfg, dcfg, ckpt.load(tpath, t_like),
+                ckpt.load(dpath, d_like), cp)
+    it = synthetic.batches(stream, batch=16, seq=64, seed=0)
+    t_params, _ = TL.fit(tcfg, it, steps=steps, seed=0, verbose=verbose)
+    it = synthetic.batches(stream, batch=16, seq=64, seed=1)
+    d_params, _ = TL.fit(dcfg, it, steps=steps, seed=1, verbose=verbose)
+    ckpt.save(tpath, t_params)
+    ckpt.save(dpath, d_params)
+    return tcfg, dcfg, t_params, d_params, cp
+
+
+def bench_prompts(cp, n: int, seq: int = 12, seed: int = 5) -> jnp.ndarray:
+    """Fixed-length prompt batch."""
+    rng = np.random.default_rng(seed)
+    rows = []
+    for p in synthetic.prompts(cp, n, prompt_words=3, seed=seed):
+        p = p[:seq]
+        if len(p) < seq:
+            p = np.concatenate([np.full(seq - len(p), synthetic.PAD,
+                                        np.int32), p])
+        rows.append(p)
+    return jnp.asarray(np.stack(rows), jnp.int32)
+
+
+def null_texts(cp, n: int, length: int, seed: int = 31) -> np.ndarray:
+    """Human-written stand-ins: fresh corpus samples (H0 text)."""
+    docs = cp.documents(n, seed=seed)
+    rows = []
+    for d in docs:
+        t = synthetic.encode(d)[:length]
+        while len(t) < length:
+            t = np.concatenate([t, synthetic.encode(d)])[:length]
+        rows.append(t)
+    return np.stack(rows)
+
+
+def logppl(params, cfg, tokens: np.ndarray) -> float:
+    """Mean negative log-likelihood per token under ``cfg`` (LOGPPL)."""
+    toks = jnp.asarray(tokens, jnp.int32)
+    logits, _ = M.forward(params, cfg, {"tokens": toks[:, :-1]})
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), -1)
+    nll = -jnp.take_along_axis(logp, toks[:, 1:, None], axis=-1)[..., 0]
+    return float(nll.mean())
+
+
+def timer(fn, *args, warmup=1, iters=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters, out

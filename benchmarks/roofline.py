@@ -1,0 +1,126 @@
+"""Roofline analysis (deliverable g): three-term model per (arch x shape x
+mesh) from the dry-run artifacts.
+
+  compute term    = FLOPs_per_chip / 197e12        (bf16 peak, TPU v5e)
+  memory term     = HBM_bytes_per_chip / 819e9
+  collective term = collective_bytes_per_chip / 50e9 (per-link ICI)
+
+FLOPs/bytes are the loop-scaled per-partition costs from
+``repro.launch.hlocost`` (XLA's cost_analysis counts while bodies once).
+MODEL_FLOPS uses 6·N·D for training and 2·N(_active)·D for inference; the
+ratio MODEL/HLO exposes remat and redundant-compute waste."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import INPUT_SHAPES, get_config, draft_for
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+DRY = os.path.join(ART, "dryrun")
+
+PEAK_FLOPS = 197e12     # bf16 / chip
+HBM_BW = 819e9          # bytes/s / chip
+ICI_BW = 50e9           # bytes/s / link
+HBM_CAP = 16e9          # v5e HBM per chip
+
+
+def model_flops_per_chip(arch: str, shape_name: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    s = INPUT_SHAPES[shape_name]
+    D = s.global_batch * s.seq_len
+    n_active = cfg.active_param_count()   # MoE: only routed experts compute
+    if s.kind == "train":
+        return 6.0 * n_active * D / n_chips
+    if s.kind == "prefill":
+        return 2.0 * n_active * D / n_chips
+    # decode: one spec step = draft K tokens + target verify of K+1
+    K = 4
+    dcfg = draft_for(cfg)
+    f = 2.0 * cfg.active_param_count() * s.global_batch * (K + 1)
+    f += 2.0 * dcfg.param_count() * s.global_batch * (K + 1)
+    return f / n_chips
+
+
+def analyze_record(rec: dict) -> dict:
+    n_chips = 512 if rec["mesh"] == "2x16x16" else 256
+    out = dict(rec)
+    if rec.get("status") != "OK" or "flops" not in rec:
+        return out
+    ct = rec["flops"] / PEAK_FLOPS
+    mt = rec.get("hbm_bytes", 0) / HBM_BW
+    lt = rec.get("collectives", {}).get("total", 0) / ICI_BW
+    terms = {"compute_s": ct, "memory_s": mt, "collective_s": lt}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_chip(rec["arch"], rec["shape"], n_chips)
+    out.update({
+        **{k: float(f"{v:.6g}") for k, v in terms.items()},
+        "dominant": dom.replace("_s", ""),
+        "model_flops_per_chip": float(f"{mf:.6g}"),
+        "useful_compute_ratio": float(f"{mf / max(rec['flops'], 1):.4g}"),
+        "step_time_bound_s": float(f"{max(terms.values()):.6g}"),
+    })
+    mem = rec.get("memory") or {}
+    arg = mem.get("argument_bytes") or 0
+    tmp = mem.get("temp_bytes") or 0
+    out["hbm_resident_gb"] = round((arg + tmp) / 1e9, 2)
+    out["fits_hbm"] = bool(arg + tmp <= HBM_CAP)
+    return out
+
+
+def _refresh_from_hlo(rec: dict, dry_dir: str) -> dict:
+    """Recompute the cost terms from the stored HLO with the *current*
+    cost model (dry-runs cache the compiled module gzipped)."""
+    import gzip
+    fn = os.path.join(dry_dir, "hlo",
+                      f"{rec['arch']}_{rec['shape']}_{rec['mesh']}.hlo.gz")
+    if not os.path.exists(fn):
+        return rec
+    from repro.launch import hlocost
+    with gzip.open(fn, "rt") as f:
+        cost = hlocost.module_cost(f.read())
+    rec = dict(rec, flops=cost.flops, hbm_bytes=cost.bytes,
+               collectives={"total": cost.collective_bytes,
+                            "per_op": cost.per_collective},
+               bytes_by_op_top=dict(cost.top_bytes(8)))
+    return rec
+
+
+def run(verbose: bool = True, mesh_filter: str = "16x16",
+        variant: str = "baseline", refresh: bool = True):
+    dry = DRY + ("_opt" if variant == "opt" else "")
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dry, "*.json"))):
+        with open(fn) as f:
+            rec = json.load(f)
+        if refresh and rec.get("status") == "OK":
+            rec = _refresh_from_hlo(rec, dry)
+        rows.append(analyze_record(rec))
+    out = os.path.join(ART, "roofline.json" if variant == "baseline"
+                       else "roofline_opt.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    if verbose:
+        hdr = (f"{'arch':24s} {'shape':12s} {'mesh':8s} {'status':10s} "
+               f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+               f"{'dominant':>10s} {'useful':>7s} {'GB/dev':>7s} fits")
+        print(hdr)
+        for r in rows:
+            if mesh_filter and r["mesh"] != mesh_filter:
+                continue
+            if r.get("status") != "OK":
+                print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                      f"{r['status'][:40]}")
+                continue
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{'OK':10s} {r['compute_s']:10.4g} {r['memory_s']:10.4g} "
+                  f"{r['collective_s']:10.4g} {r['dominant']:>10s} "
+                  f"{r['useful_compute_ratio']:7.3f} "
+                  f"{r['hbm_resident_gb']:7.2f} "
+                  f"{'Y' if r['fits_hbm'] else 'N'}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(mesh_filter="")

@@ -1,0 +1,65 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,tab1,...] [--fast]
+
+Prints ``name,key=value,...`` CSV lines; JSON artifacts land in
+``artifacts/``."""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,tab1,fig2,kernels,roofline")
+    ap.add_argument("--fast", action="store_true",
+                    help="reduced sample counts (CI mode)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    failures = []
+
+    def section(name, fn):
+        print(f"### {name}", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"### {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            failures.append(name)
+
+    if want("fig1"):
+        from benchmarks import fig1_tradeoff
+        section("fig1", lambda: fig1_tradeoff.run(
+            n_seeds=8_000 if args.fast else 60_000,
+            n_gamma=9 if args.fast else 17))
+    if want("tab1"):
+        from benchmarks import tab1_efficiency
+        section("tab1", lambda: tab1_efficiency.run(
+            n_tokens=24 if args.fast else 48,
+            batch=4 if args.fast else 8))
+    if want("fig2"):
+        from benchmarks import fig2_detect
+        section("fig2", fig2_detect.run)
+    if want("kernels"):
+        from benchmarks import kernels_bench
+        section("kernels", kernels_bench.run)
+    if want("roofline"):
+        from benchmarks import roofline
+        section("roofline", lambda: roofline.run(mesh_filter=""))
+
+    if failures:
+        print(f"FAILED sections: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

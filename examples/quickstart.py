@@ -1,0 +1,53 @@
+"""Quickstart: the paper's pipeline end-to-end in one file.
+
+1. Train a tiny draft/target pair on the synthetic corpus.
+2. Generate with Algorithm 1 (watermarked speculative sampling with
+   pseudorandom acceptance).
+3. Detect the watermark with the Ars score — and fail to detect it in
+   unwatermarked text.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+sys.path[:0] = [os.path.join(os.path.dirname(__file__), ".."),
+                os.path.join(os.path.dirname(__file__), "..", "src")]
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core.detection import gumbel_detect, pipeline, records
+from repro.serve import engine as E
+
+
+def main():
+    print("== 1. training tiny draft/target pair (cached) ==")
+    tcfg, dcfg, tp, dp, cp = common.train_pair(verbose=True)
+
+    print("== 2. watermarked speculative generation (Alg. 1) ==")
+    key = jax.random.key(2026)
+    scfg = E.SpecConfig(K=3, watermark="gumbel", temperature=0.9,
+                        ctx_window=8)
+    prompts = common.bench_prompts(cp, 8)
+    res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=100,
+                     key=key)
+    print(f"AATPS (accepted tokens/step): {res.aatps:.2f}  "
+          f"[1 = no speedup, K+1 = max]")
+    from repro.data.synthetic import decode_bytes
+    print("sample:", decode_bytes(res.tokens[0, :100])[:70], "...")
+
+    print("== 3. detection ==")
+    dec = E.make_decoder(scfg)
+    wm = pipeline.records_from_generation(res, dec, key, tcfg.vocab,
+                                          n_tokens=100)
+    nulls = pipeline.null_records(common.null_texts(cp, 8, 100), dec, key,
+                                  tcfg.vocab, ctx_window=scfg.ctx_window)
+    s_wm = gumbel_detect.scores_oracle(wm, 100)
+    s_null = gumbel_detect.scores_oracle(nulls, 100)
+    print(f"watermarked Ars scores : {np.round(s_wm, 1)}")
+    print(f"null Ars scores        : {np.round(s_null, 1)}")
+    print(f"AUC = {records.auc(s_wm, s_null):.3f}  (0.5 = chance)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Config registry: ``get_config("deepseek-7b")`` / ``--arch deepseek-7b``."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig, reduced
+from repro.configs import (
+    nemotron_4_340b,
+    deepseek_67b,
+    deepseek_7b,
+    zamba2_1_2b,
+    rwkv6_3b,
+    olmoe_1b_7b,
+    whisper_tiny,
+    kimi_k2_1t_a32b,
+    yi_6b,
+    llama_3_2_vision_11b,
+    paper_models,
+)
+
+_ASSIGNED = [
+    nemotron_4_340b.CONFIG,
+    deepseek_67b.CONFIG,
+    deepseek_7b.CONFIG,
+    zamba2_1_2b.CONFIG,
+    rwkv6_3b.CONFIG,
+    olmoe_1b_7b.CONFIG,
+    whisper_tiny.CONFIG,
+    kimi_k2_1t_a32b.CONFIG,
+    yi_6b.CONFIG,
+    llama_3_2_vision_11b.CONFIG,
+]
+
+# Beyond-paper variant: sliding-window yi-6b, demonstrating the long_500k
+# path for a dense architecture (see DESIGN.md §Arch-applicability).
+_YI_6B_SWA = dataclasses.replace(
+    yi_6b.CONFIG, name="yi-6b-swa4k", window=4096,
+    source="arXiv:2403.04652 + sliding-window variant (this repo)")
+
+_EXTRA = [
+    paper_models.LLAMA_68M,
+    paper_models.LLAMA_7B,
+    paper_models.GEMMA_2B,
+    paper_models.GEMMA_7B,
+    paper_models.TINY_TARGET,
+    paper_models.TINY_DRAFT,
+    _YI_6B_SWA,
+]
+
+REGISTRY: Dict[str, ModelConfig] = {c.name: c for c in _ASSIGNED + _EXTRA}
+ASSIGNED_ARCHS = [c.name for c in _ASSIGNED]
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_smoke_config(name: str, **overrides) -> ModelConfig:
+    """Reduced variant of the same family (<=2 layers, d_model<=512,
+    <=4 experts) for CPU smoke tests."""
+    return reduced(get_config(name), **overrides)
+
+
+def draft_for(cfg: ModelConfig, *, n_layers: int = 4, d_model: int = 1024,
+              window: int = 0) -> ModelConfig:
+    """Companion draft model for speculative serving: a small dense
+    transformer sharing the target's vocabulary (the paper's draft models —
+    Llama-68M, Gemma-2B — are likewise small dense LMs regardless of the
+    target family)."""
+    return ModelConfig(
+        name=cfg.name + "-draft", arch_type="dense", n_layers=n_layers,
+        d_model=d_model, n_heads=8, n_kv_heads=8, d_ff=4 * d_model,
+        vocab=cfg.vocab, head_dim=d_model // 8, act="silu", window=window,
+        source="draft companion (this repo)")
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (see the assignment block): name -> (kind, seq, batch)
+# kind: "train" lowers train_step; "prefill" lowers prefill;
+#       "decode" lowers serve_step (1 new token, KV cache of seq_len).
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str
+    seq_len: int
+    global_batch: int
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", "train", 4096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": InputShape("decode_32k", "decode", 32768, 128),
+    "long_500k": InputShape("long_500k", "decode", 524288, 1),
+}
+
+def supports_shape(cfg: ModelConfig, shape_name: str) -> bool:
+    """long_500k requires sub-quadratic attention (SSM/hybrid/sliding
+    window); all other shapes apply to every assigned architecture."""
+    if shape_name == "long_500k":
+        return cfg.supports_long_decode
+    return True
+
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "SSMConfig", "reduced",
+    "REGISTRY", "ASSIGNED_ARCHS", "get_config", "get_smoke_config",
+    "draft_for", "supports_shape", "InputShape", "INPUT_SHAPES",
+]

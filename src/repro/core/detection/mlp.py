@@ -1,0 +1,73 @@
+"""Minimal JAX MLP + Adam trainer for the detection heads (Bayes-MLP and the
+ψ logistic model).  Self-contained: no optax dependency."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def init_mlp(key, sizes: Sequence[int]):
+    params = []
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        k1, key = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k1, (a, b)) * (1.0 / jnp.sqrt(a)),
+            "b": jnp.zeros((b,)),
+        })
+    return params
+
+
+def apply_mlp(params, x):
+    h = x
+    for i, layer in enumerate(params):
+        h = h @ layer["w"] + layer["b"]
+        if i < len(params) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def adam_init(params):
+    z = jax.tree.map(jnp.zeros_like, params)
+    return {"m": z, "v": jax.tree.map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params, grads, state, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                     state["v"], grads)
+    mhat = jax.tree.map(lambda x: x / (1 - b1 ** t), m)
+    vhat = jax.tree.map(lambda x: x / (1 - b2 ** t), v)
+    params = jax.tree.map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps),
+        params, mhat, vhat)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def fit(loss_fn: Callable, params, data, *, steps=300, lr=1e-2,
+        batch=None, seed=0):
+    """Full-batch (or minibatch) Adam fit of ``loss_fn(params, data)``."""
+    state = adam_init(params)
+    key = jax.random.key(seed)
+    n = jax.tree.leaves(data)[0].shape[0]
+
+    @jax.jit
+    def step(params, state, idx):
+        d = jax.tree.map(lambda a: a[idx], data)
+        loss, grads = jax.value_and_grad(loss_fn)(params, d)
+        params, state = adam_step(params, grads, state, lr=lr)
+        return params, state, loss
+
+    loss = jnp.inf
+    for i in range(steps):
+        if batch is None:
+            idx = jnp.arange(n)
+        else:
+            key, sub = jax.random.split(key)
+            idx = jax.random.randint(sub, (batch,), 0, n)
+        params, state, loss = step(params, state, idx)
+    return params, float(loss)

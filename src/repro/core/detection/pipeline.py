@@ -1,0 +1,74 @@
+"""Glue from generation output (or arbitrary text) to detection records.
+
+At detection time we only have tokens + the watermark key: context hashes,
+the candidate statistics y^D / y^T, and the acceptance coins u = G(ζ^R) are
+all *recovered* (that recoverability is the whole point of Alg. 1).  The
+``src`` ground truth is only available from the engine (oracle/MLP
+training)."""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prf
+from repro.core.detection.records import SeqRecord
+from repro.core.watermark.base import Decoder
+from repro.serve.engine import GenerationResult
+
+
+def recover_u(key, ctx_hashes: np.ndarray) -> np.ndarray:
+    flat = jnp.asarray(ctx_hashes.reshape(-1), jnp.uint32)
+    us = jax.vmap(lambda ch: prf.accept_uniform(key, ch))(flat)
+    return np.asarray(us).reshape(ctx_hashes.shape)
+
+
+def _stats(dec: Decoder, tokens, key, hashes, stream, vocab):
+    y = dec.recover_stats(jnp.asarray(tokens), key,
+                          jnp.asarray(hashes, jnp.uint32), stream, vocab)
+    return np.asarray(y)
+
+
+def records_from_generation(res: GenerationResult, dec: Decoder, key,
+                            vocab: int, *, n_tokens: Optional[int] = None,
+                            watermarked: bool = True) -> List[SeqRecord]:
+    """One SeqRecord per sequence, truncated to ``n_tokens``."""
+    out: List[SeqRecord] = []
+    B = res.tokens.shape[0]
+    for b in range(B):
+        n = int(res.lengths[b])
+        if n_tokens is not None:
+            n = min(n, n_tokens)
+        toks = res.tokens[b, :n]
+        hashes = res.ctx_hashes[b, :n]
+        y_d = _stats(dec, toks, key, hashes, prf.STREAM_DRAFT, vocab)
+        y_t = _stats(dec, toks, key, hashes, prf.STREAM_TARGET, vocab)
+        u = recover_u(key, hashes)
+        acc = float(np.mean(res.from_draft[b, :n] == 0))
+        out.append(SeqRecord(
+            tokens=toks, y_draft=y_d, y_target=y_t, u=u,
+            src=res.from_draft[b, :n].astype(np.int8),
+            watermarked=watermarked, accept_ratio=acc,
+            ctx=hashes.astype(np.uint32)))
+    return out
+
+
+def null_records(tokens: np.ndarray, dec: Decoder, key, vocab: int, *,
+                 ctx_window: int = 4) -> List[SeqRecord]:
+    """Records for unwatermarked text (H0): tokens (B, N) from any source.
+    Everything is recovered exactly as for suspect text."""
+    toks = jnp.asarray(tokens, jnp.int32)
+    hashes = np.asarray(prf.sliding_context_hashes(toks, ctx_window))
+    out: List[SeqRecord] = []
+    for b in range(tokens.shape[0]):
+        y_d = _stats(dec, tokens[b], key, hashes[b], prf.STREAM_DRAFT, vocab)
+        y_t = _stats(dec, tokens[b], key, hashes[b], prf.STREAM_TARGET,
+                     vocab)
+        u = recover_u(key, hashes[b])
+        out.append(SeqRecord(
+            tokens=np.asarray(tokens[b]), y_draft=y_d, y_target=y_t, u=u,
+            src=np.zeros(tokens.shape[1], np.int8), watermarked=False,
+            accept_ratio=0.0, ctx=hashes[b].astype(np.uint32)))
+    return out

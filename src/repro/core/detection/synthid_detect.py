@@ -1,0 +1,160 @@
+"""SynthID Bayesian detectors under speculative sampling (Sec. 4.2, App. E).
+
+Watermarked g-value likelihood per tournament layer l:
+
+    f1(g_l | g_<l) = 1/2 + (2·g_l − 1)·(1/4)·P(ψ_l = 2 | g_<l)
+
+where ψ_l is the number of unique tokens in the layer-l match and
+P(ψ_l=2|·) is modeled by logistic regression (β_l + Σ_{j<l} δ_{l,j} g_j).
+Unwatermarked g-values are Bernoulli(0.5).
+
+Per-token LLR given the draft-selection probability q_t:
+
+    llr_t = log[ q_t·R(y^D) + (1−q_t)·R(y^T) ],   R(y) = Π_l f1(g_l)/(1/2)
+
+Selectors:
+- **Bayes-Prior**: q_t ≡ p (estimated acceptance rate) — the weighted
+  average of Dathathri et al.; dilutes the signal.
+- **Bayes-MLP (ours)**: q_t = 1[u_t ≤ τ_t], τ_t = MLP(g^D, g^T), trained
+  with σ(α(τ_t − u_t)) against the ground-truth source labels.
+- **Oracle**: q_t = 1[src_t = draft].
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.detection.mlp import apply_mlp, fit, init_mlp
+from repro.core.detection.records import SeqRecord
+
+ALPHA = 20.0
+
+
+# ---------------------------------------------------------------------------
+# ψ logistic model
+# ---------------------------------------------------------------------------
+
+
+def init_psi(m: int):
+    return {"beta": jnp.zeros((m,)), "delta": jnp.zeros((m, m))}
+
+
+def psi_prob(psi_params, g: jnp.ndarray) -> jnp.ndarray:
+    """P(ψ_l = 2 | g_<l) for each layer.  g: (..., m) in {0,1}."""
+    m = g.shape[-1]
+    tri = jnp.tril(jnp.ones((m, m)), k=-1)          # strictly lower
+    ctx = jnp.einsum("...j,lj->...l", g, psi_params["delta"] * tri)
+    return jax.nn.sigmoid(psi_params["beta"] + ctx)
+
+
+def log_f1(psi_params, g: jnp.ndarray) -> jnp.ndarray:
+    """Σ_l log f1(g_l | g_<l).  g: (..., m)."""
+    pw = psi_prob(psi_params, g)
+    f1 = 0.5 + (2.0 * g - 1.0) * 0.25 * pw
+    return jnp.sum(jnp.log(jnp.maximum(f1, 1e-9)), axis=-1)
+
+
+def fit_psi(y_wm: np.ndarray, m: int, steps: int = 400, lr: float = 5e-2):
+    """MLE of the ψ model on watermarked (true-source) g-values (n, m)."""
+    data = {"g": jnp.asarray(y_wm, jnp.float32)}
+
+    def loss(params, d):
+        return -jnp.mean(log_f1(params, d["g"]))
+
+    params, _ = fit(loss, init_psi(m), data, steps=steps, lr=lr)
+    return params
+
+
+def log_ratio(psi_params, g):
+    """log R(y) = Σ_l [log f1 − log(1/2)]."""
+    m = g.shape[-1]
+    return log_f1(psi_params, g) - m * jnp.log(0.5)
+
+
+# ---------------------------------------------------------------------------
+# Sequence scores
+# ---------------------------------------------------------------------------
+
+
+def _seq_score(psi_params, yd, yt, q):
+    """Σ_t log[q_t·R(y^D_t) + (1−q_t)·R(y^T_t)] — numerically stable."""
+    ld = log_ratio(psi_params, yd)          # (N,)
+    lt = log_ratio(psi_params, yt)
+    q = jnp.clip(q, 1e-6, 1 - 1e-6)
+    per_tok = jnp.logaddexp(jnp.log(q) + ld, jnp.log1p(-q) + lt)
+    return jnp.sum(per_tok)
+
+
+def scores_prior(psi_params, records: Sequence[SeqRecord], p: float,
+                 n_tokens: int) -> np.ndarray:
+    out = []
+    for r in records:
+        r = r.truncate(n_tokens).dedupe()
+        out.append(float(_seq_score(
+            psi_params, jnp.asarray(r.y_draft, jnp.float32),
+            jnp.asarray(r.y_target, jnp.float32),
+            jnp.full((len(r.tokens),), p))))
+    return np.asarray(out)
+
+
+def scores_oracle(psi_params, records: Sequence[SeqRecord],
+                  n_tokens: int) -> np.ndarray:
+    out = []
+    for r in records:
+        r = r.truncate(n_tokens).dedupe()
+        q = (r.src == 0).astype(np.float32)
+        out.append(float(_seq_score(
+            psi_params, jnp.asarray(r.y_draft, jnp.float32),
+            jnp.asarray(r.y_target, jnp.float32), jnp.asarray(q))))
+    return np.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# Bayes-MLP
+# ---------------------------------------------------------------------------
+
+
+def fit_selector_mlp(records_wm: Sequence[SeqRecord], m: int, *,
+                     hidden: int = 64, steps: int = 600, lr: float = 3e-3,
+                     seed: int = 0):
+    """Train τ_t = MLP([g^D, g^T]) with BCE on σ(α(τ − u)) vs true source."""
+    xs, us, labels = [], [], []
+    for r in records_wm:
+        xs.append(np.concatenate([r.y_draft, r.y_target], axis=-1))
+        us.append(r.u)
+        labels.append((r.src == 0).astype(np.float32))
+    data = {
+        "x": jnp.asarray(np.concatenate(xs), jnp.float32),
+        "u": jnp.asarray(np.concatenate(us), jnp.float32),
+        "y": jnp.asarray(np.concatenate(labels), jnp.float32),
+    }
+    params = init_mlp(jax.random.key(seed), [2 * m, hidden, hidden, 1])
+
+    def loss(p, d):
+        tau = jax.nn.sigmoid(apply_mlp(p, d["x"])[..., 0])
+        pred = jax.nn.sigmoid(ALPHA * (tau - d["u"]))
+        pred = jnp.clip(pred, 1e-6, 1 - 1e-6)
+        return -jnp.mean(d["y"] * jnp.log(pred)
+                         + (1 - d["y"]) * jnp.log(1 - pred))
+
+    params, final_loss = fit(loss, params, data, steps=steps, lr=lr,
+                             batch=min(4096, data["x"].shape[0]))
+    return params, final_loss
+
+
+def scores_mlp(psi_params, mlp_params, records: Sequence[SeqRecord],
+               n_tokens: int) -> np.ndarray:
+    out = []
+    for r in records:
+        r = r.truncate(n_tokens).dedupe()
+        x = jnp.asarray(
+            np.concatenate([r.y_draft, r.y_target], axis=-1), jnp.float32)
+        tau = jax.nn.sigmoid(apply_mlp(mlp_params, x)[..., 0])
+        q = (jnp.asarray(r.u) <= tau).astype(jnp.float32)   # hard at infer
+        out.append(float(_seq_score(
+            psi_params, jnp.asarray(r.y_draft, jnp.float32),
+            jnp.asarray(r.y_target, jnp.float32), q)))
+    return np.asarray(out)

@@ -1,0 +1,135 @@
+"""Keyed pseudorandom substrate.
+
+A watermark is driven by a *recoverable* pseudorandom variable
+``ζ_t = F(key, context_t)`` where ``context_t`` is the window of the last
+``c`` generated tokens.  Alg. 1 of the paper splits ζ into three independent
+streams:
+
+    ζ^D — drafting (watermarked draft-model sampling)
+    ζ^T — target / residual / bonus sampling
+    ζ^R — the pseudorandom acceptance coin (the paper's new ingredient)
+
+We realise F with JAX's threefry: ``fold_in(key, context_hash)`` then
+``fold_in(·, stream_id)``.  Everything here is jit-able and vmappable, and
+the same functions run at *detection* time to recover ζ from observed text.
+
+A second, integer-only PRF (`hash_u32`) mirrors the in-kernel hash used by
+the Pallas kernels so kernel and oracle agree bit-exactly.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# stream ids
+STREAM_DRAFT = 0xD0
+STREAM_TARGET = 0x7A
+STREAM_ACCEPT = 0x5E
+STREAM_PLAIN = 0x99   # non-watermark randomness (e.g. finite-m synthid draw)
+
+_MIX = np.uint32(0x9E3779B9)   # golden-ratio odd constant
+
+
+# ---------------------------------------------------------------------------
+# Context hashing
+# ---------------------------------------------------------------------------
+
+
+def context_hash(window_tokens: jnp.ndarray) -> jnp.ndarray:
+    """Order-dependent hash of the last-c-token window.
+
+    window_tokens: (..., c) int32.  Returns (...,) uint32.
+    """
+    toks = window_tokens.astype(jnp.uint32)
+    c = toks.shape[-1]
+
+    h = jnp.full(toks.shape[:-1], np.uint32(2166136261), jnp.uint32)
+    for i in range(c):
+        t = toks[..., i]
+        h = (h ^ (t + _MIX + (h << 6) + (h >> 2)))
+        h = h * np.uint32(16777619)
+    return h
+
+
+def sliding_context_hashes(tokens: jnp.ndarray, c: int) -> jnp.ndarray:
+    """Per-position context hashes for a whole sequence.
+
+    tokens: (..., S).  Position t is hashed from tokens[t-c:t] (prompt/BOS
+    positions use left-padding with token id 0).  Returns (..., S) uint32.
+    """
+    S = tokens.shape[-1]
+    padded = jnp.pad(tokens, [(0, 0)] * (tokens.ndim - 1) + [(c, 0)])
+    windows = jnp.stack([padded[..., i:i + S] for i in range(c)], axis=-1)
+    return context_hash(windows)
+
+
+# ---------------------------------------------------------------------------
+# JAX-key PRF (used by the pure-JAX watermark decoders)
+# ---------------------------------------------------------------------------
+
+
+def stream_key(key: jax.Array, ctx_hash: jnp.ndarray, stream: int):
+    """Derive the per-position, per-stream threefry key."""
+    k = jax.random.fold_in(key, ctx_hash.astype(jnp.uint32))
+    return jax.random.fold_in(k, stream)
+
+
+def uniform_from(key: jax.Array, ctx_hash, stream: int, shape=()):
+    """U(0,1) draws for stream ``stream`` at context ``ctx_hash``."""
+    return jax.random.uniform(stream_key(key, ctx_hash, stream), shape)
+
+
+def gumbel_uniforms(key, ctx_hash, stream: int, vocab: int):
+    """The (U_w)_{w in vocab} vector of the Gumbel-max watermark."""
+    u = jax.random.uniform(stream_key(key, ctx_hash, stream), (vocab,),
+                           minval=jnp.float32(1e-12), maxval=1.0)
+    return u
+
+
+def synthid_gbits(key, ctx_hash, stream: int, m: int, vocab: int):
+    """The m Bernoulli(0.5) g-vectors of SynthID: (m, vocab) in {0,1}."""
+    bits = jax.random.bernoulli(
+        stream_key(key, ctx_hash, stream), 0.5, (m, vocab))
+    return bits.astype(jnp.float32)
+
+
+def accept_uniform(key, ctx_hash):
+    """The ζ^R acceptance coin u_t = G(ζ^R_t) of Alg. 1."""
+    return uniform_from(key, ctx_hash, STREAM_ACCEPT)
+
+
+# ---------------------------------------------------------------------------
+# Integer-only counter PRF — mirrored inside the Pallas kernels.
+# ---------------------------------------------------------------------------
+
+
+def hash_u32(x: jnp.ndarray) -> jnp.ndarray:
+    """murmur3-style finalizer over uint32 (vectorized)."""
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * np.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * np.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def kernel_uniform(seed: jnp.ndarray, counter: jnp.ndarray) -> jnp.ndarray:
+    """U(0,1) from (seed, counter) via the integer hash.  Bit-exact match of
+    the in-kernel PRF (see repro/kernels)."""
+    bits = hash_u32(seed.astype(jnp.uint32) * _MIX
+                    ^ hash_u32(counter.astype(jnp.uint32)))
+    # 24 mantissa bits -> (0,1)
+    return (bits >> np.uint32(8)).astype(jnp.float32) * np.float32(
+        1.0 / (1 << 24)) + np.float32(1.0 / (1 << 25))
+
+
+def kernel_gbit(seed: jnp.ndarray, counter: jnp.ndarray) -> jnp.ndarray:
+    """{0,1} bit from (seed, counter), bit-exact with kernels."""
+    bits = hash_u32(seed.astype(jnp.uint32) * _MIX
+                    ^ hash_u32(counter.astype(jnp.uint32)))
+    return (bits >> np.uint32(31)).astype(jnp.float32)

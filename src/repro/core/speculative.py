@@ -1,0 +1,147 @@
+"""Speculative sampling machinery (Sec. 2) and the paper's Algorithm 1.
+
+Distribution-level operators (used by the theory/trade-off numerics and by
+property tests):
+
+- ``residual_dist``            (P − Q)_+ normalized
+- ``acceptance_rate``          Σ_w min(P_w, Q_w) = 1 − TV(Q,P)
+- ``apply_spec_kernel``        A_spec(Q,P) ∘ Q_ζ  (Eq. 5, Hu's composition)
+- ``apply_google_kernel``      A_ξ(Q,P) ∘ Q_ζ    (App. C.2, watermarked
+                               residual)
+- ``alg1_output_dist``         P'_ζ of Alg. 1 (Eq. 15): pseudorandom
+                               acceptance makes the output a deterministic
+                               function of ζ = (ζ^D, ζ^T, ζ^R)
+
+Token-level operators (used by the serving engine and kernels):
+
+- ``verify_tokens``            vectorized accept/reject of K draft tokens
+                               with pseudorandom coins + residual sampling
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prf
+
+EPS = 1e-30
+
+
+def residual_dist(p, q):
+    """(P − Q)_+ normalized; if P==Q returns P (never sampled anyway)."""
+    r = jnp.maximum(p - q, 0.0)
+    z = r.sum(axis=-1, keepdims=True)
+    safe = jnp.where(z > EPS, r / jnp.maximum(z, EPS), p)
+    return safe
+
+
+def acceptance_rate(q, p, axis=-1):
+    return jnp.sum(jnp.minimum(p, q), axis=axis)
+
+
+def accept_prob(p, q):
+    return jnp.minimum(1.0, p / jnp.maximum(q, EPS))
+
+
+# ---------------------------------------------------------------------------
+# Distribution-level kernels
+# ---------------------------------------------------------------------------
+
+
+def apply_spec_kernel(qz, p, q):
+    """A_spec(Q,P) ∘ Q_ζ  — Hu & Huang's maximal-efficiency composition.
+
+    qz: watermarked draft dist (..., V); p, q: unwatermarked target/draft.
+    """
+    a = accept_prob(p, q)
+    rej_mass = jnp.sum(qz * (1.0 - a), axis=-1, keepdims=True)
+    return qz * a + residual_dist(p, q) * rej_mass
+
+
+def apply_google_kernel(qz, p, q, resid_z):
+    """A_ξ(Q,P) ∘ Q_ζ with a *watermarked* residual distribution resid_z
+    (= S((P−Q)_+, ξ)); Google's class, App. C.2."""
+    a = accept_prob(p, q)
+    rej_mass = jnp.sum(qz * (1.0 - a), axis=-1, keepdims=True)
+    return qz * a + resid_z * rej_mass
+
+
+def alg1_output_dist(qz, p, q, resid_z, u):
+    """Eq. (15): P'_ζ(w) with the pseudorandom acceptance coin u = G(ζ^R).
+
+    qz: Q_{ζ^D} (..., V); resid_z: (P−Q)_{+,ζ^T} (..., V); u: scalar in (0,1).
+    With degenerate qz/resid_z the output is degenerate too (Thm 4.1c).
+    """
+    a = accept_prob(p, q)
+    acc_ind = (u < a).astype(qz.dtype)              # per-token indicator
+    acc_mass = jnp.sum(qz * acc_ind, axis=-1, keepdims=True)
+    return qz * acc_ind + (1.0 - acc_mass) * resid_z
+
+
+# ---------------------------------------------------------------------------
+# Token-level verification (vectorized over batch): the operational Alg. 1.
+# ---------------------------------------------------------------------------
+
+
+class VerifyResult(NamedTuple):
+    accepted: jnp.ndarray      # (B, K) bool — prefix acceptance per slot
+    n_accepted: jnp.ndarray    # (B,) int32 — accepted prefix length
+    out_tokens: jnp.ndarray    # (B, K+1) int32 — final tokens (padded)
+    out_len: jnp.ndarray       # (B,) int32 — number of emitted tokens
+    from_draft: jnp.ndarray    # (B, K+1) bool — token source flag
+    u: jnp.ndarray             # (B, K) acceptance coins actually used
+
+
+def verify_tokens(draft_tokens, p_probs, q_probs, u, resid_tokens,
+                  bonus_tokens):
+    """Vectorized accept/reject of K draft tokens per sequence.
+
+    draft_tokens: (B, K) int32 — tokens proposed by the draft model.
+    p_probs, q_probs: (B, K) — target/draft probability OF the draft token.
+    u: (B, K) — acceptance coins (pseudorandom in Alg. 1, fresh uniform in
+        standard speculative sampling).
+    resid_tokens: (B, K) int32 — the (watermarked) residual token that would
+        be emitted on first rejection at each slot.
+    bonus_tokens: (B,) int32 — the bonus token if all K accepted.
+
+    Acceptance is prefix-structured: slot s is kept iff all slots < s
+    accepted AND u_s < min(1, p_s/q_s).
+    """
+    a = jnp.minimum(1.0, p_probs / jnp.maximum(q_probs, EPS))
+    ok = u < a                                        # (B, K)
+    prefix = jnp.cumprod(ok.astype(jnp.int32), axis=-1).astype(bool)
+    n_acc = prefix.sum(axis=-1).astype(jnp.int32)     # (B,)
+    B, K = draft_tokens.shape
+    all_ok = n_acc == K
+
+    # output slot s < n_acc -> draft token; slot n_acc -> residual (if any
+    # rejection) or bonus (if all accepted)
+    idx = jnp.arange(K + 1)
+    out = jnp.zeros((B, K + 1), draft_tokens.dtype)
+    out = out.at[:, :K].set(jnp.where(prefix, draft_tokens, 0))
+    # token at position n_acc:
+    extra = jnp.where(all_ok, bonus_tokens,
+                      jnp.take_along_axis(
+                          resid_tokens, jnp.minimum(n_acc, K - 1)[:, None],
+                          axis=1)[:, 0])
+    out = jax.vmap(lambda o, n, e: o.at[n].set(e))(out, n_acc, extra)
+    out_len = n_acc + 1
+    from_draft = idx[None, :] < n_acc[:, None]
+    return VerifyResult(accepted=prefix, n_accepted=n_acc, out_tokens=out,
+                        out_len=out_len, from_draft=from_draft, u=u)
+
+
+def standard_acceptance_coins(key, shape):
+    """Fresh (non-recoverable) uniforms — standard speculative sampling."""
+    return jax.random.uniform(key, shape)
+
+
+def pseudorandom_acceptance_coins(key, ctx_hashes):
+    """Alg. 1 line 8: u = G(ζ^R) derived from the watermark key + context.
+
+    ctx_hashes: (B, K) uint32 — context hash at each draft slot."""
+    flat = ctx_hashes.reshape(-1)
+    us = jax.vmap(lambda ch: prf.accept_uniform(key, ch))(flat)
+    return us.reshape(ctx_hashes.shape)

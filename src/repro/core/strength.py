@@ -1,0 +1,90 @@
+"""Watermark strength (Def. 3.1) and its theory (Thms 3.1–3.3).
+
+    WS(P_ζ) = E_ζ[ KL(P_ζ ‖ P) ] = Ent(P) − E_ζ[ Ent(P_ζ) ]   (unbiased S)
+
+All estimators are Monte-Carlo over pseudorandom seeds, fully vectorized.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prf
+
+
+def entropy(p, axis=-1):
+    p = jnp.maximum(p, 0.0)
+    return -jnp.sum(jnp.where(p > 0, p * jnp.log(p), 0.0), axis=axis)
+
+
+def kl(p, q, axis=-1):
+    p = jnp.maximum(p, 0.0)
+    ratio = jnp.log(jnp.maximum(p, 1e-30)) - jnp.log(jnp.maximum(q, 1e-30))
+    return jnp.sum(jnp.where(p > 0, p * ratio, 0.0), axis=axis)
+
+
+def tv(p, q, axis=-1):
+    return 0.5 * jnp.sum(jnp.abs(p - q), axis=axis)
+
+
+def mc_modified_dists(dist_fn: Callable, probs, key, n_seeds: int,
+                      stream=prf.STREAM_DRAFT):
+    """Sample P_ζ for n_seeds independent ζ.  Returns (n_seeds, V)."""
+    ctxs = jnp.arange(n_seeds, dtype=jnp.uint32)
+
+    def one(ch):
+        return dist_fn(probs, key, ch, stream)
+
+    return jax.vmap(one)(ctxs)
+
+
+def watermark_strength(dist_fn: Callable, probs, key, n_seeds: int = 4096,
+                       stream=prf.STREAM_DRAFT):
+    """MC estimate of WS = E_ζ[KL(P_ζ‖P)]."""
+    pz = mc_modified_dists(dist_fn, probs, key, n_seeds, stream)
+    return jnp.mean(kl(pz, probs[None, :]))
+
+
+def strength_via_entropy(dist_fn: Callable, probs, key, n_seeds: int = 4096,
+                         stream=prf.STREAM_DRAFT):
+    """Thm 3.2 identity: WS = Ent(P) − E_ζ Ent(P_ζ) (requires unbiasedness)."""
+    pz = mc_modified_dists(dist_fn, probs, key, n_seeds, stream)
+    return entropy(probs) - jnp.mean(entropy(pz))
+
+
+def check_unbiased(dist_fn: Callable, probs, key, n_seeds: int = 8192,
+                   stream=prf.STREAM_DRAFT):
+    """Returns max_w |E_ζ[P_ζ](w) − P(w)| (should shrink as 1/sqrt(n))."""
+    pz = mc_modified_dists(dist_fn, probs, key, n_seeds, stream)
+    return jnp.max(jnp.abs(pz.mean(0) - probs))
+
+
+# ---------------------------------------------------------------------------
+# Thm 3.1 numerics: p-value decay rate of the likelihood-ratio test.
+# ---------------------------------------------------------------------------
+
+
+def llr_pvalue_decay(dist_fn: Callable, probs, key, n_tokens: int,
+                     n_seeds_null: int = 2048):
+    """Simulate the UMP test and return the empirical −(1/n)·log(pval).
+
+    Under H1 we draw tokens from P_ζ (one ζ per position); the LLR is
+    Λ_n = Σ log(P_ζ(w_t)/P(w_t)).  The p-value is estimated by the Chernoff
+    bound at s=1: pval ≤ exp(−Λ_n) (exact large-deviation exponent because
+    E_{H0}[e^{Z}] = 1), so −(1/n)logpval → D̄ = WS.
+    """
+    ctxs = jnp.arange(n_tokens, dtype=jnp.uint32) + jnp.uint32(77777)
+
+    def one(ch, k):
+        pz = dist_fn(probs, key, ch, prf.STREAM_DRAFT)
+        tok = jax.random.categorical(k, jnp.log(jnp.maximum(pz, 1e-30)))
+        z = jnp.log(jnp.maximum(pz[tok], 1e-30)) - jnp.log(
+            jnp.maximum(probs[tok], 1e-30))
+        return z
+
+    keys = jax.random.split(jax.random.key(123), n_tokens)
+    zs = jax.vmap(one)(ctxs, keys)
+    lam = jnp.sum(zs)
+    return lam / n_tokens   # == −(1/n)·log(Chernoff pval)

@@ -1,0 +1,152 @@
+"""Trade-off curves between watermark strength and sampling efficiency
+(Sec. 3.2, Fig. 1; classes from Eq. (9) and App. C.2).
+
+All curves are Monte-Carlo estimates over pseudorandom seeds, exactly as in
+the paper's App. C.1 (which uses 1e7 seeds; we default to 2e5 — the V=10
+simulation concentrates fast, and benchmarks report the MC half-width).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import prf, speculative as spec
+from repro.core.strength import entropy, kl, tv
+from repro.core.watermark.base import get_decoder
+from repro.core.watermark import gumbel, synthid  # register decoders
+
+# Appendix C.1 simulated token distributions (draft concentrates mass,
+# target has higher entropy).
+Q_SIM = jnp.array([0.4, 0.10, 0.12, 0.11, 0.08, 0.06, 0.05, 0.035, 0.025,
+                   0.02])
+P_SIM = jnp.array([0.1, 0.13, 0.155, 0.115, 0.235, 0.065, 0.055, 0.05, 0.06,
+                   0.035])
+
+
+@dataclasses.dataclass
+class Curve:
+    label: str
+    efficiency: np.ndarray   # x-axis: SSE
+    strength: np.ndarray     # y-axis: WS
+    gammas: np.ndarray
+
+
+def _mc_dists(decoder, probs, key, n_seeds, stream):
+    ctxs = jnp.arange(n_seeds, dtype=jnp.uint32)
+    return jax.vmap(lambda ch: decoder.modified_dist(
+        probs, key, ch, stream))(ctxs)
+
+
+def linear_class_curve(decoder_name: str, *, q=Q_SIM, p=P_SIM,
+                       n_seeds: int = 200_000, n_gamma: int = 33,
+                       n_theta: int = 33, key=None, seed_chunk: int = 20_000,
+                       **dec_kw) -> Curve:
+    """Trade-off for the linearly watermarked classes (Eq. 9/10).
+
+    For each γ, strength is Ent-identity on (1−γ)P + γP_ζ; efficiency is
+    max_θ E_ζ[1 − TV((1−θ)Q + θQ_ζ, (1−γ)P + γP_ζ)].
+    """
+    key = key if key is not None else jax.random.key(0)
+    dec = get_decoder(decoder_name, **dec_kw)
+    gammas = jnp.linspace(0.0, 1.0, n_gamma)
+    thetas = jnp.linspace(0.0, 1.0, n_theta)
+
+    @jax.jit
+    def chunk_stats(ctxs):
+        qz = jax.vmap(lambda ch: dec.modified_dist(
+            q, key, ch, prf.STREAM_DRAFT))(ctxs)         # (n, V)
+        pz = jax.vmap(lambda ch: dec.modified_dist(
+            p, key, ch, prf.STREAM_TARGET))(ctxs)        # (n, V)
+        # entropy of mixture per gamma: (G, n)
+        mix_p = (1 - gammas)[:, None, None] * p[None, None, :] + \
+            gammas[:, None, None] * pz[None, :, :]
+        ent = entropy(mix_p).sum(axis=1)                 # (G,) sum over seeds
+        # TV per (G, Th): E_ζ TV(mix_q(θ), mix_p(γ))
+        mix_q = (1 - thetas)[:, None, None] * q[None, None, :] + \
+            thetas[:, None, None] * qz[None, :, :]
+        diff = mix_q[None, :, :, :] - mix_p[:, None, :, :]   # (G,Th,n,V)
+        tvs = 0.5 * jnp.abs(diff).sum(-1).sum(-1)            # (G,Th)
+        return ent, tvs
+
+    n_chunks = max(1, n_seeds // seed_chunk)
+    ent_acc = jnp.zeros((n_gamma,))
+    tv_acc = jnp.zeros((n_gamma, n_theta))
+    total = 0
+    for c in range(n_chunks):
+        ctxs = (jnp.arange(seed_chunk, dtype=jnp.uint32)
+                + jnp.uint32(c * seed_chunk))
+        e, t = chunk_stats(ctxs)
+        ent_acc += e
+        tv_acc += t
+        total += seed_chunk
+    mean_ent = ent_acc / total
+    mean_tv = tv_acc / total
+    strength = np.asarray(entropy(p) - mean_ent)
+    efficiency = np.asarray(1.0 - mean_tv.min(axis=1))
+    return Curve(label=f"linear/{dec.name}", efficiency=efficiency,
+                 strength=strength, gammas=np.asarray(gammas))
+
+
+def composed_class_curve(decoder_name: str, kind: str, *, q=Q_SIM, p=P_SIM,
+                         n_seeds: int = 200_000, n_gamma: int = 33, key=None,
+                         seed_chunk: int = 20_000, **dec_kw) -> Curve:
+    """Hu's class / Google's class (App. C.2).
+
+    Draft decoder fixed (θ=1).  Target family:
+        (1−γ)·S_base + γ·S_target,
+    with S_base = A_spec(Q,P)∘Q_ζ (Hu) or A_ξ(Q,P)∘Q_ζ (Google, watermarked
+    residual).
+    """
+    assert kind in ("hu", "google")
+    key = key if key is not None else jax.random.key(0)
+    dec = get_decoder(decoder_name, **dec_kw)
+    gammas = jnp.linspace(0.0, 1.0, n_gamma)
+
+    @jax.jit
+    def chunk_stats(ctxs):
+        qz = jax.vmap(lambda ch: dec.modified_dist(
+            q, key, ch, prf.STREAM_DRAFT))(ctxs)
+        pz_t = jax.vmap(lambda ch: dec.modified_dist(
+            p, key, ch, prf.STREAM_TARGET))(ctxs)
+        if kind == "hu":
+            base = spec.apply_spec_kernel(qz, p[None], q[None])
+        else:
+            resid = spec.residual_dist(p, q)
+            resid_z = jax.vmap(lambda ch: dec.modified_dist(
+                resid, key, ch, prf.STREAM_TARGET + 1))(ctxs)
+            base = spec.apply_google_kernel(qz, p[None], q[None], resid_z)
+        mix = (1 - gammas)[:, None, None] * base[None] + \
+            gammas[:, None, None] * pz_t[None]             # (G,n,V)
+        ws = kl(mix, p[None, None, :]).sum(axis=1)         # (G,)
+        tvs = tv(qz[None], mix).sum(axis=1)                # (G,)
+        return ws, tvs
+
+    n_chunks = max(1, n_seeds // seed_chunk)
+    ws_acc = jnp.zeros((n_gamma,))
+    tv_acc = jnp.zeros((n_gamma,))
+    total = 0
+    for c in range(n_chunks):
+        ctxs = (jnp.arange(seed_chunk, dtype=jnp.uint32)
+                + jnp.uint32(c * seed_chunk + 1_000_000))
+        w, t = chunk_stats(ctxs)
+        ws_acc += w
+        tv_acc += t
+        total += seed_chunk
+    return Curve(label=f"{kind}/{dec.name}",
+                 efficiency=np.asarray(1.0 - tv_acc / total),
+                 strength=np.asarray(ws_acc / total),
+                 gammas=np.asarray(gammas))
+
+
+def reference_points(q=Q_SIM, p=P_SIM) -> Dict[str, float]:
+    """Markers on Fig. 1: standard spec-sampling efficiency and the maximal
+    watermark strength (red star = (1−TV, Ent(P)) achieved by Alg. 1)."""
+    return {
+        "std_spec_efficiency": float(1.0 - tv(q, p)),
+        "max_strength": float(entropy(p)),
+        "entropy_q": float(entropy(q)),
+    }

@@ -1,0 +1,4 @@
+"""Unbiased watermark decoders.  Importing the package registers all
+built-in decoders ("gumbel", "synthid", "synthid-inf")."""
+from repro.core.watermark import gumbel, synthid  # noqa: F401  (register)
+from repro.core.watermark.base import Decoder, get_decoder  # noqa: F401

@@ -1,0 +1,48 @@
+"""Unbiased watermark decoder interface.
+
+A decoder S maps (P, ζ) to a modified distribution P_ζ with
+E_ζ[P_ζ] = P (unbiasedness).  We expose two views:
+
+- ``modified_dist(probs, key, ctx_hash)`` → P_ζ as a dense vector
+  (used by strength/trade-off numerics and the serving engine);
+- ``sample(probs, key, ctx_hash)`` → (token, stats) where ``stats`` is the
+  detection statistic y_t (Gumbel: the selected U value; SynthID: the m
+  g-bits of the selected token).
+
+Decoders are registered by name for config-driven selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Decoder:
+    name: str
+    # (probs (V,), key, ctx_hash, stream) -> P_zeta (V,)
+    modified_dist: Callable
+    # (probs (V,), key, ctx_hash, stream) -> (token (), y_stat)
+    sample: Callable
+    # (tokens (...,), key, ctx_hashes (...,), stream) -> y stats for detection
+    recover_stats: Callable
+    stat_dim: int = 1        # 1 for gumbel (scalar U), m for synthid
+    degenerate: bool = False  # True if P_zeta is a.s. a point mass
+
+_REGISTRY: Dict[str, Callable[..., Decoder]] = {}
+
+
+def register(name):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_decoder(name: str, **kw) -> Decoder:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown decoder {name!r}; known: {sorted(_REGISTRY)}")
+    return _REGISTRY[name](**kw)

@@ -1,0 +1,54 @@
+"""Gumbel-max watermark (Aaronson 2023), Eq. (2) of the paper.
+
+ζ assigns i.i.d. U(0,1) values to every token; the decoder deterministically
+selects  argmax_w  log(U_w) / P_w,  which is distributed as P over ζ
+(Gumbel-max / exponential-race trick) — hence unbiased — and P_ζ is a point
+mass, so the scheme attains the maximal watermark strength Ent(P)
+(Thm 3.3).  Detection statistic: y_t = U_{w_t}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prf
+from repro.core.watermark.base import Decoder, register
+
+
+def _scores(probs, u):
+    # log(U_w)/P_w ; tokens with zero mass are excluded
+    p = jnp.maximum(probs, 0.0)
+    s = jnp.log(u) / jnp.maximum(p, 1e-30)
+    return jnp.where(p > 0, s, -jnp.inf)
+
+
+def modified_dist(probs, key, ctx_hash, stream=prf.STREAM_DRAFT):
+    u = prf.gumbel_uniforms(key, ctx_hash, stream, probs.shape[-1])
+    tok = jnp.argmax(_scores(probs, u), axis=-1)
+    return jax.nn.one_hot(tok, probs.shape[-1], dtype=jnp.float32)
+
+
+def sample(probs, key, ctx_hash, stream=prf.STREAM_DRAFT):
+    u = prf.gumbel_uniforms(key, ctx_hash, stream, probs.shape[-1])
+    tok = jnp.argmax(_scores(probs, u), axis=-1)
+    return tok, u[tok]
+
+
+def recover_stats(tokens, key, ctx_hashes, stream, vocab: int):
+    """y_t = U_{w_t} recovered from (key, context) at detection time.
+
+    tokens/ctx_hashes: (...,) arrays -> y (...,) float32."""
+    def one(tok, ch):
+        u = prf.gumbel_uniforms(key, ch, stream, vocab)
+        return u[tok]
+
+    flat_t = tokens.reshape(-1)
+    flat_c = ctx_hashes.reshape(-1)
+    ys = jax.vmap(one)(flat_t, flat_c)
+    return ys.reshape(tokens.shape)
+
+
+@register("gumbel")
+def make(**kw) -> Decoder:
+    return Decoder(name="gumbel", modified_dist=modified_dist, sample=sample,
+                   recover_stats=recover_stats, stat_dim=1, degenerate=True)

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the watermark/speculative/recurrence hot-spots.
+
+- ``gumbel_argmax``: fused PRF + Gumbel-max race over the vocab row.
+- ``tournament``: SynthID m-round tournament, vocab row VMEM-resident.
+- ``spec_verify``: fused accept/reject + watermarked-residual race.
+- ``wkv``: RWKV6 recurrence, state in VMEM scratch across seq blocks
+  (custom VJP: kernel forward, scan backward).
+- ``ssd``: Mamba2 chunked recurrence, state + decay tiles VMEM-resident
+  (custom VJP, same pattern).
+
+``ops`` holds the jitted wrappers (interpret=True on CPU); ``ref`` /
+``wkv.wkv_ref`` / ``ssd.ssd_ref`` are the pure-jnp oracles the tests
+sweep against.
+"""
+from repro.kernels import ops, ref  # noqa: F401

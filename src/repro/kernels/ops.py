@@ -1,0 +1,44 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels run in ``interpret=True`` mode — the
+kernel body executes in Python per grid step, validating the exact program
+that ``pl.pallas_call`` would stage for TPU.  On a real TPU backend the same
+call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.gumbel_argmax import gumbel_argmax_kernel
+from repro.kernels.spec_verify import spec_verify_kernel
+from repro.kernels.tournament import tournament_kernel
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gumbel_argmax(probs, seeds, *, block_rows: int = 4,
+                  interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return gumbel_argmax_kernel(probs, seeds, block_rows=block_rows,
+                                interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("m", "block_rows", "interpret"))
+def tournament(probs, seeds, *, m: int = 30, block_rows: int = 4,
+               interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return tournament_kernel(probs, seeds, m=m, block_rows=block_rows,
+                             interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def spec_verify(p, q, draft_tokens, u, resid_seeds, *,
+                interpret: bool | None = None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return spec_verify_kernel(p, q, draft_tokens, u, resid_seeds,
+                              interpret=interpret)

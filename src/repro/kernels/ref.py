@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for the Pallas kernels (bit-exact PRF mirror)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prf
+
+
+def gumbel_argmax_ref(probs, seeds):
+    """probs (B,V), seeds (B,) -> (tokens (B,), u (B,))."""
+    B, V = probs.shape
+    w = jnp.arange(V, dtype=jnp.uint32)
+
+    def one(p, s):
+        u = prf.kernel_uniform(s, w)
+        score = jnp.log(u) / jnp.maximum(p.astype(jnp.float32), 1e-30)
+        score = jnp.where(p > 0, score, -jnp.inf)
+        tok = jnp.argmax(score).astype(jnp.int32)
+        return tok, u[tok]
+
+    return jax.vmap(one)(probs, seeds.astype(jnp.uint32))
+
+
+def tournament_ref(probs, seeds, *, m: int = 30):
+    """probs (B,V), seeds (B,) -> m-round tournament distribution (B,V)."""
+    B, V = probs.shape
+    w = jnp.arange(V, dtype=jnp.uint32)
+
+    def one(p, s):
+        p = p.astype(jnp.float32)
+
+        def body(i, p):
+            g = prf.kernel_gbit(s, w + jnp.uint32(V) * jnp.uint32(i))
+            mass = jnp.sum(p * g)
+            return p * (1.0 + g - mass)
+
+        return jax.lax.fori_loop(0, m, body, p)
+
+    return jax.vmap(one)(probs, seeds.astype(jnp.uint32))
+
+
+def spec_verify_ref(p, q, draft_tokens, u, resid_seeds):
+    """Mirror of spec_verify_kernel; see its docstring."""
+    B, K, V = p.shape
+    p = p.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    p_tok = jnp.take_along_axis(
+        p, draft_tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(
+        q, draft_tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    a = jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-30))
+    ok = (u < a).astype(jnp.int32)
+    prefix = jnp.cumprod(ok, axis=-1)
+    n_acc = prefix.sum(axis=-1).astype(jnp.int32)
+    slot = jnp.minimum(n_acc, K - 1)
+    p_s = jnp.take_along_axis(p, slot[:, None, None], axis=1)[:, 0]
+    q_s = jnp.take_along_axis(q, slot[:, None, None], axis=1)[:, 0]
+    seed_s = jnp.take_along_axis(
+        resid_seeds.astype(jnp.uint32), slot[:, None], axis=1)[:, 0]
+    r = jnp.maximum(p_s - q_s, 0.0)
+    w = jnp.arange(V, dtype=jnp.uint32)
+
+    def race(r_row, s):
+        uv = prf.kernel_uniform(s, w)
+        score = jnp.log(uv) / jnp.maximum(r_row, 1e-30)
+        score = jnp.where(r_row > 0, score, -jnp.inf)
+        tok = jnp.argmax(score).astype(jnp.int32)
+        return tok, uv[tok]
+
+    rtok, ru = jax.vmap(race)(r, seed_s)
+    return n_acc, prefix, rtok, ru

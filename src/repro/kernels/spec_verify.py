@@ -1,0 +1,102 @@
+"""Fused speculative verification kernel (Alg. 1 accept/reject + residual).
+
+Per sequence row, given the K target/draft probability rows, the drafted
+tokens and the pseudorandom acceptance coins u = G(zeta^R):
+
+  1. gathers p_s(w_s), q_s(w_s) via masked sums (TPU-friendly one-hot dot,
+     no scalar gathers),
+  2. computes the prefix-acceptance  n_acc = |{s : all u_<s ok and u_s <
+     min(1, p/q)}|,
+  3. for the first rejected slot, samples the *watermarked* residual token
+     argmax_w log(U_w)/(p_w - q_w)_+  with in-kernel PRF uniforms —
+     the Gumbel-max race is scale-invariant, so the residual needs no
+     normalization pass.
+
+Everything after the two model calls of a speculative step fuses into one
+VMEM-resident pass over the (K, V) probability block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.gumbel_argmax import _uniform
+
+
+def _kernel(p_ref, q_ref, tok_ref, u_ref, seed_ref,
+            nacc_ref, acc_ref, rtok_ref, ru_ref, *, K: int, vocab: int):
+    p = p_ref[0].astype(jnp.float32)       # (K, Vp)
+    q = q_ref[0].astype(jnp.float32)       # (K, Vp)
+    toks = tok_ref[0]                      # (K,)
+    u = u_ref[0].astype(jnp.float32)       # (K,)
+    seeds = seed_ref[0].astype(jnp.uint32)  # (K,)
+    kv, vp = p.shape
+    w = jax.lax.broadcasted_iota(jnp.int32, (kv, vp), 1)
+    onehot = (w == toks[:, None]).astype(jnp.float32)
+    p_tok = jnp.sum(p * onehot, axis=-1)   # (K,)
+    q_tok = jnp.sum(q * onehot, axis=-1)
+    a = jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-30))
+    ok = (u < a).astype(jnp.int32)
+    prefix = jnp.cumprod(ok)
+    n_acc = jnp.sum(prefix)
+    acc_ref[0] = prefix
+    nacc_ref[0] = n_acc.astype(jnp.int32)[None]
+
+    # residual sampling at slot min(n_acc, K-1): Gumbel race over (p-q)_+
+    slot = jnp.minimum(n_acc, K - 1)
+    sel = (jax.lax.broadcasted_iota(jnp.int32, (kv, 1), 0)
+           == slot).astype(jnp.float32)
+    p_s = jnp.sum(p * sel, axis=0)         # (Vp,)
+    q_s = jnp.sum(q * sel, axis=0)
+    seed_s = jnp.sum(seeds * (jax.lax.iota(jnp.int32, kv) == slot
+                              ).astype(jnp.uint32))
+    r = jnp.maximum(p_s - q_s, 0.0)
+    wv = jax.lax.iota(jnp.uint32, vp)
+    uv = _uniform(seed_s, wv)
+    score = jnp.log(uv) / jnp.maximum(r, 1e-30)
+    score = jnp.where((r > 0) & (wv < vocab), score, -jnp.inf)
+    rtok = jnp.argmax(score).astype(jnp.int32)
+    rtok_ref[0] = rtok[None]
+    ru_ref[0] = jnp.sum(uv * (wv == rtok.astype(jnp.uint32))
+                        .astype(jnp.float32))[None]
+
+
+def spec_verify_kernel(p, q, draft_tokens, u, resid_seeds, *,
+                       interpret: bool = False):
+    """p, q: (B, K, V); draft_tokens: (B, K) int32; u: (B, K) f32 coins;
+    resid_seeds: (B, K) uint32 (zeta^T residual stream seeds).
+
+    Returns (n_acc (B,), accepted (B, K), resid_tok (B,), resid_u (B,))."""
+    B, K, V = p.shape
+    vp = -(-V // 128) * 128
+    pp = jnp.zeros((B, K, vp), p.dtype).at[:, :, :V].set(p)
+    qp = jnp.zeros((B, K, vp), q.dtype).at[:, :, :V].set(q)
+    outs = pl.pallas_call(
+        functools.partial(_kernel, K=K, vocab=V),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, K, vp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, K, vp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pp, qp, draft_tokens, u, resid_seeds.astype(jnp.uint32))
+    n_acc, acc, rtok, ru = outs
+    return n_acc[:, 0], acc, rtok[:, 0], ru[:, 0]

@@ -1,0 +1,344 @@
+"""Loop-aware cost model over compiled HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body **once**, independent of
+the trip count — for layer-scanned / microbatch-scanned models that
+underestimates FLOPs by orders of magnitude.  This module reparses
+``compiled.as_text()`` and aggregates
+
+  - dot FLOPs            (2 * numel(result) * contraction size),
+  - HBM bytes            (operands + result of every non-fused instruction),
+  - collective bytes     (operand sizes of all-gather / all-reduce /
+                          reduce-scatter / all-to-all / collective-permute),
+
+scaling each ``while`` body by its trip count (recovered from the loop
+condition's integer bound).  Fusion computations are descended for FLOPs but
+charged as single instructions for bytes (their intermediates never touch
+HBM).
+
+This is a structural model, not a simulator: it is the profile the §Perf
+hillclimbs iterate against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute", "all-gather-start", "all-reduce-start",
+                "collective-permute-start", "ragged-all-to-all"}
+
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*)\[([\d,]*)\]")
+# after "name = ", the opcode is the first bare identifier followed by "(".
+# (type strings contain no identifiers directly followed by parens; tuple
+# types may contain /*index=N*/ comments, so we cannot split on "=").
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"(?:^|\s)([a-z][a-z0-9\-]*)\(")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+_TRIP_RE = re.compile(r'known_trip_count[":{\s]+n["\s:]+"?(\d+)')
+
+
+def _type_nbytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        nb = _DTYPE_BYTES.get(dt)
+        if nb is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str          # everything after the '(' — operands + attributes
+
+    def operand_names(self) -> List[str]:
+        if ")" not in self.rest:
+            return []
+        args = self.rest[: self.rest.index(")")]
+        return re.findall(r"%([\w.\-]+)", args)
+
+    def attr(self, key: str) -> Optional[str]:
+        m = re.search(rf"{key}=%?([\w.\-]+)", self.rest)
+        return m.group(1) if m else None
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    symbols: Dict[str, str]      # instr name -> result type string
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _NAME_RE.match(line)
+        if m:
+            name = m.group(1)
+            tail = line[m.end():]
+            om = _OPCODE_RE.search(tail)
+            if not om:
+                continue
+            type_str = tail[:om.start()].strip()
+            opcode = om.group(1)
+            rest = tail[om.end():]
+            ins = Instr(name, type_str, opcode, rest)
+            cur.instrs.append(ins)
+            cur.symbols[name] = ins.type_str
+    return comps, entry
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out_dt, out_dims = _shape_dims(ins.type_str)
+    numel = 1
+    for d in out_dims:
+        numel *= d
+    # contraction size from the lhs operand's contracting dims
+    ops = ins.operand_names()
+    k = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
+    if ops and m and m.group(1):
+        lhs_t = comp.symbols.get(ops[0], "")
+        _, lhs_dims = _shape_dims(lhs_t)
+        for ci in m.group(1).split(","):
+            ci = int(ci)
+            if ci < len(lhs_dims):
+                k *= lhs_dims[ci]
+    return 2.0 * numel * k
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> int:
+    """Largest integer constant in the loop condition (and its fusions)."""
+    best = 1
+    seen = set()
+
+    def visit(c: Computation):
+        if c.name in seen:
+            return
+        seen.add(c.name)
+        nonlocal best
+        for ins in c.instrs:
+            if ins.opcode == "constant":
+                m = re.match(r"(-?\d+)\)?", ins.rest)
+                if m and ins.type_str.startswith(("s32", "s64", "u32")):
+                    best = max(best, int(m.group(1)))
+            callee = ins.attr("calls") or ins.attr("to_apply")
+            if callee and callee in comps:
+                visit(comps[callee])
+
+    visit(cond)
+    return best
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    bytes_by_op: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.per_collective.items():
+            d = self.per_collective.setdefault(k, {"count": 0, "bytes": 0})
+            d["count"] += v["count"] * mult
+            d["bytes"] += v["bytes"] * mult
+        for k, v in other.bytes_by_op.items():
+            self.bytes_by_op[k] = self.bytes_by_op.get(k, 0.0) + v * mult
+
+    def top_bytes(self, n: int = 10):
+        return sorted(self.bytes_by_op.items(), key=lambda kv: -kv[1])[:n]
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "reshape", "after-all", "partition-id",
+                   "replica-id"}
+
+
+def _comp_cost(comp: Computation, comps: Dict[str, Computation],
+               memo: Dict[str, Cost], *, in_fusion: bool) -> Cost:
+    key = comp.name + ("@f" if in_fusion else "")
+    if key in memo:
+        return memo[key]
+    c = Cost()
+    memo[key] = c  # break cycles defensively
+    for ins in comp.instrs:
+        op = ins.opcode
+        if op == "dot":
+            c.flops += _dot_flops(ins, comp)
+        if op == "while":
+            body = ins.attr("body")
+            cond = ins.attr("condition")
+            tm = _TRIP_RE.search(ins.rest)
+            if tm:  # XLA annotates known trip counts in backend_config
+                trips = int(tm.group(1))
+            else:
+                trips = _trip_count(comps[cond], comps) if cond in comps \
+                    else 1
+            if body in comps:
+                c.add(_comp_cost(comps[body], comps, memo,
+                                 in_fusion=in_fusion), trips)
+            continue
+        if op in ("fusion", "call", "async-start"):
+            callee = ins.attr("calls") or ins.attr("to_apply")
+            if callee and callee in comps:
+                # descend for flops only; bytes are charged at this level
+                inner = _comp_cost(comps[callee], comps, memo, in_fusion=True)
+                c.flops += inner.flops
+                c.collective_bytes += inner.collective_bytes
+                for k, v in inner.per_collective.items():
+                    d = c.per_collective.setdefault(
+                        k, {"count": 0, "bytes": 0})
+                    d["count"] += v["count"]
+                    d["bytes"] += v["bytes"]
+        if op == "conditional":
+            for br in re.findall(r"%([\w.\-]+)", ins.rest.split("),")[-1]):
+                if br in comps:
+                    c.add(_comp_cost(comps[br], comps, memo,
+                                     in_fusion=in_fusion))
+            continue
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES or op in _COLLECTIVES:
+            nb = sum(_type_nbytes(comp.symbols.get(o, ""))
+                     for o in ins.operand_names())
+            if nb == 0:
+                nb = _type_nbytes(ins.type_str)
+            c.collective_bytes += nb
+            d = c.per_collective.setdefault(base_op,
+                                            {"count": 0, "bytes": 0})
+            d["count"] += 1
+            d["bytes"] += nb
+        if not in_fusion and op not in _SKIP_BYTES_OPS:
+            c.bytes += _instr_bytes(ins, comp, c, comps)
+    memo[key] = c
+    return c
+
+
+def _fusion_param_slice_bytes(callee: Computation) -> Dict[int, int]:
+    """For each parameter of a fusion computation consumed ONLY through
+    dynamic-slice/gather, the actual bytes read (slice results) — loop
+    xs tensors are charged per-slice, not per-full-array."""
+    param_idx: Dict[str, int] = {}
+    for ins in callee.instrs:
+        if ins.opcode == "parameter":
+            m = re.match(r"(\d+)\)", ins.rest)
+            if m:
+                param_idx[ins.name] = int(m.group(1))
+    sliced: Dict[int, int] = {}
+    consumers: Dict[str, List[Instr]] = {}
+    for ins in callee.instrs:
+        for o in ins.operand_names():
+            consumers.setdefault(o, []).append(ins)
+    for pname, pi in param_idx.items():
+        cons = consumers.get(pname, [])
+        if cons and all(i.opcode in ("dynamic-slice", "gather", "slice")
+                        for i in cons):
+            sliced[pi] = sum(_type_nbytes(i.type_str) for i in cons)
+    return sliced
+
+
+def _instr_bytes(ins: Instr, comp: Computation, c: Cost,
+                 comps: Optional[Dict[str, Computation]] = None) -> float:
+    """HBM traffic model per instruction.
+
+    In-place update ops (DUS/scatter inside while bodies — the KV-cache and
+    recurrent-state writes) touch only the updated slice, NOT the full
+    operand; gathers/slices touch only the rows they read.  Everything else
+    is operands + result (the fusion boundary traffic)."""
+    op = ins.opcode
+    op_types = [comp.symbols.get(o, "") for o in ins.operand_names()]
+    ops_nb = [_type_nbytes(t) for t in op_types]
+    res_nb = _type_nbytes(ins.type_str)
+    if op == "dynamic-update-slice":
+        nb = 2.0 * (ops_nb[1] if len(ops_nb) > 1 else res_nb)
+    elif op == "scatter":
+        nb = 2.0 * sum(ops_nb[2:]) if len(ops_nb) > 2 else res_nb
+    elif op in ("gather", "dynamic-slice", "slice"):
+        nb = 2.0 * res_nb
+    else:
+        if op == "fusion" and comps is not None:
+            callee = ins.attr("calls")
+            if callee in comps:
+                ccomp = comps[callee]
+                root = ccomp.instrs[-1] if ccomp.instrs else None
+                if root is not None and root.opcode == \
+                        "dynamic-update-slice":
+                    # in-place cache/accumulator update: traffic is the
+                    # updated slice, not the full buffer
+                    upd = root.operand_names()
+                    upd_nb = (_type_nbytes(ccomp.symbols.get(upd[1], ""))
+                              if len(upd) > 1 else 0)
+                    nb = 2.0 * max(upd_nb, 1)
+                    c.bytes_by_op["fusion:dus"] = \
+                        c.bytes_by_op.get("fusion:dus", 0.0) + nb
+                    return nb
+                sliced = _fusion_param_slice_bytes(ccomp)
+                ops_nb = [sliced.get(i, onb)
+                          for i, onb in enumerate(ops_nb)]
+        nb = res_nb + sum(ops_nb)
+        if op == "fusion":
+            # XLA aliases one same-typed operand for in-place loop fusions
+            # (accumulators / cache updates) — count that buffer once.
+            for t, onb in zip(op_types, ops_nb):
+                if t == ins.type_str:
+                    nb -= onb
+                    break
+    key = op
+    if op == "fusion":
+        m = re.search(r'op_name="[^"]*?([\w.\-]+)"', ins.rest)
+        if m:
+            key = "fusion:" + m.group(1).split("/")[-1][:40]
+    c.bytes_by_op[key] = c.bytes_by_op.get(key, 0.0) + nb
+    return nb
+
+
+def module_cost(hlo_text: str) -> Cost:
+    """Loop-scaled {flops, bytes, collective_bytes} of a compiled module.
+
+    All quantities are PER PARTITION (SPMD modules describe one shard)."""
+    comps, entry = parse_module(hlo_text)
+    if not entry:
+        return Cost()
+    # fusion computations should not be walked at top level
+    memo: Dict[str, Cost] = {}
+    return _comp_cost(comps[entry], comps, memo, in_fusion=False)

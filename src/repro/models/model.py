@@ -1,0 +1,94 @@
+"""Unified model API dispatching on ``cfg.arch_type``.
+
+    params = init_params(key, cfg, dtype)
+    logits, aux = forward(params, cfg, batch)          # (B,S,V)
+    logits, cache = prefill(params, cfg, batch, max_seq)
+    logits, cache = decode_step(params, cfg, token, cache)   # (B,V)
+
+``batch`` is a dict with "tokens" (B,S) plus modality extras
+("audio_emb" / "image_emb") for the stub-frontend archs.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as S
+from repro.models import transformer as T
+
+_ATTN_FAMS = ("dense", "moe", "vlm", "audio")
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.arch_type in _ATTN_FAMS:
+        return T
+    if cfg.arch_type in ("ssm", "hybrid"):
+        return S
+    raise ValueError(f"unknown arch_type {cfg.arch_type}")
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32):
+    return _mod(cfg).init_params(key, cfg, dtype)
+
+
+def forward(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: bool = False):
+    return _mod(cfg).forward(params, cfg, batch, remat=remat)
+
+
+def prefill(params, cfg: ModelConfig, batch: Dict[str, Any], max_seq: int,
+            cache_dtype=None):
+    return _mod(cfg).prefill(params, cfg, batch, max_seq,
+                             cache_dtype=cache_dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
+    return _mod(cfg).init_cache(cfg, batch, max_seq, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    return _mod(cfg).decode_step(params, cfg, token, cache)
+
+
+def example_batch(cfg: ModelConfig, batch: int, seq: int, *, key=None,
+                  dtype=jnp.float32) -> Dict[str, Any]:
+    """Concrete random inputs for smoke tests (allocates)."""
+    key = key if key is not None else jax.random.key(0)
+    k1, k2 = jax.random.split(key)
+    b: Dict[str, Any] = {
+        "tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab)}
+    if cfg.arch_type == "audio":
+        b["audio_emb"] = jax.random.normal(
+            k2, (batch, cfg.n_audio_frames, cfg.d_model), dtype)
+    if cfg.arch_type == "vlm":
+        b["image_emb"] = jax.random.normal(
+            k2, (batch, cfg.n_image_tokens, cfg.d_model), dtype)
+    return b
+
+
+def abstract_batch(cfg: ModelConfig, batch: int, seq: int,
+                   dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins (no allocation) for dry-run lowering."""
+    b: Dict[str, Any] = {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32)}
+    if cfg.arch_type == "audio":
+        b["audio_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_audio_frames, cfg.d_model), dtype)
+    if cfg.arch_type == "vlm":
+        b["image_emb"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_image_tokens, cfg.d_model), dtype)
+    return b
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda k: init_params(k, cfg, dtype), jax.random.key(0))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_seq, dtype))

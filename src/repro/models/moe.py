@@ -1,0 +1,136 @@
+"""Mixture-of-Experts FFN with sort-based (dropless-style, capacity-bounded)
+dispatch.
+
+Design notes (TPU adaptation, see DESIGN.md):
+- We deliberately avoid the dense one-hot dispatch einsum (whose contraction
+  FLOPs rival the expert compute itself at kimi-k2 scale).  Instead tokens
+  are routed with an argsort over expert ids + rank-within-expert, gathered
+  into an (E, C, d) buffer, processed by a batched expert einsum, and
+  scatter-added back.  Gather/scatter cost bytes, not MXU FLOPs, so the
+  compiled HLO_FLOPs stay close to 6·N_active·D.
+- Expert dim E is sharded over the "model" mesh axis (expert parallelism);
+  the token->buffer scatter induces the all-to-all.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import dense_init, activation
+
+
+def init_moe(key, d_model, moe_cfg, act, dtype):
+    m = moe_cfg
+    keys = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(keys[0], (d_model, m.n_experts), dtype),
+        "w_in": dense_init(keys[1], (m.n_experts, d_model, m.d_expert), dtype),
+        "w_out": dense_init(keys[2], (m.n_experts, m.d_expert, d_model), dtype),
+    }
+    if act == "silu":
+        p["w_gate"] = dense_init(keys[3], (m.n_experts, d_model, m.d_expert),
+                                 dtype)
+    if m.d_shared:
+        p["shared_in"] = dense_init(keys[4], (d_model, m.d_shared), dtype)
+        p["shared_gate"] = dense_init(keys[5], (d_model, m.d_shared), dtype)
+        p["shared_out"] = dense_init(
+            jax.random.fold_in(keys[5], 1), (m.d_shared, d_model), dtype)
+    return p
+
+
+def capacity(n_tokens: int, moe_cfg) -> int:
+    c = int(n_tokens * moe_cfg.top_k * moe_cfg.capacity_factor
+            / moe_cfg.n_experts) + 1
+    # round up to a multiple of 128: lane-aligned AND divisible by any dp
+    # axis product <= 128, so the (E,C,d) buffer's capacity dim can be
+    # sharded over ("pod","data") (§Perf B — an indivisible C silently
+    # forfeits the dp sharding of expert compute)
+    if c > 128:
+        c = -(-c // 128) * 128
+    c = min(max(c, 8), n_tokens * moe_cfg.top_k)
+    return c
+
+
+def apply_moe(params, moe_cfg, x, act: str, *, expert_sharding=None,
+              dropless: bool = False, shard: bool = False):
+    """x: (..., d). Returns (y, aux) where aux has router stats.
+
+    ``dropless=True`` (serving paths: prefill/decode) sizes the expert
+    buffers to hold every assignment — capacity dropping is a *training*
+    regularizer and must not perturb inference logits.
+
+    ``shard=True`` (moe_shard_constraints): pin the dispatch buffers to
+    (E -> "model", C -> dp) so the token->expert resharding lowers to an
+    all-to-all instead of buffer replication + all-reduce (§Perf B)."""
+    m = moe_cfg
+    orig_shape = x.shape
+    d = x.shape[-1]
+    xf = x.reshape(-1, d)
+    T = xf.shape[0]
+    E, K = m.n_experts, m.top_k
+    f = activation(act)
+
+    logits = jnp.einsum("td,de->te", xf, params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eids = lax.top_k(probs, K)                       # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch --------------------------------------------
+    A = T * K
+    flat_eid = eids.reshape(A)
+    flat_gate = gate.reshape(A).astype(xf.dtype)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+    order = jnp.argsort(flat_eid, stable=True)
+    sorted_eid = flat_eid[order]
+    sorted_tok = flat_tok[order]
+    sorted_gate = flat_gate[order]
+    starts = jnp.searchsorted(sorted_eid, jnp.arange(E), side="left")
+    rank = jnp.arange(A) - starts[sorted_eid]
+    # dropless: every assignment is kept (an expert receives at most T
+    # assignments since the top-k experts of a token are distinct) — used by
+    # the decode path where T is small; prefill/training use the capacity
+    # bound (dropping is a training-time regularizer + memory bound).
+    C = min(T, A) if dropless else capacity(T, m)
+    keep = rank < C
+    dest = jnp.where(keep, sorted_eid * C + rank, E * C)   # overflow slot
+
+    buf = jnp.zeros((E * C + 1, d), xf.dtype).at[dest].set(xf[sorted_tok])
+    h = buf[: E * C].reshape(E, C, d)
+    if expert_sharding is not None:
+        h = lax.with_sharding_constraint(h, expert_sharding)
+    if shard:
+        from repro.sharding.rules import constrain_dims
+        h = constrain_dims(h, ("model", "dp", None))
+
+    # ---- expert compute ---------------------------------------------------
+    hin = jnp.einsum("ecd,edf->ecf", h, params["w_in"])
+    if "w_gate" in params:
+        hin = f(jnp.einsum("ecd,edf->ecf", h, params["w_gate"])) * hin
+    else:
+        hin = f(hin)
+    out = jnp.einsum("ecf,efd->ecd", hin, params["w_out"])
+    if expert_sharding is not None:
+        out = lax.with_sharding_constraint(out, expert_sharding)
+    if shard:
+        from repro.sharding.rules import constrain_dims
+        out = constrain_dims(out, ("model", "dp", None))
+
+    # ---- combine ----------------------------------------------------------
+    out_flat = jnp.concatenate(
+        [out.reshape(E * C, d), jnp.zeros((1, d), out.dtype)], axis=0)
+    contrib = out_flat[dest] * (sorted_gate * keep.astype(out.dtype))[:, None]
+    y = jnp.zeros_like(xf).at[sorted_tok].add(contrib)
+
+    # ---- shared expert (always-on dense FFN, Kimi/DeepSeek style) ---------
+    if "shared_in" in params:
+        sh = jnp.einsum("td,df->tf", xf, params["shared_in"])
+        sh = f(jnp.einsum("td,df->tf", xf, params["shared_gate"])) * sh
+        y = y + jnp.einsum("tf,fd->td", sh, params["shared_out"])
+
+    # router aux: load-balance loss terms (Switch-style)
+    me = probs.mean(0)                                      # (E,)
+    ce = jnp.zeros(E).at[flat_eid].add(1.0) / A
+    aux = {"lb_loss": E * jnp.sum(me * ce),
+           "dropped_frac": 1.0 - keep.mean()}
+    return y.reshape(orig_shape), aux

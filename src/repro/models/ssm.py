@@ -1,0 +1,614 @@
+"""Attention-free and hybrid families.
+
+- RWKV6 ("Finch", arXiv:2404.05892): token-shift + per-channel
+  data-dependent decay WKV recurrence (linear state, O(1) decode).
+- Mamba2 (SSD) blocks and the Zamba2 hybrid (Mamba2 backbone with a single
+  SHARED attention+MLP block applied every ``hybrid_attn_every`` layers,
+  arXiv:2411.15242).
+
+Sequence processing projects the whole sequence with batched matmuls and
+runs only the recurrence through ``lax.scan`` (TPU adaptation: the matmuls
+feed the MXU; the scan is elementwise VPU work).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.sharding.rules import constrain_batch
+
+Params = Dict[str, Any]
+LORA_DIM = 32
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+def _init_rwkv_block(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    hd = cfg.ssm.head_dim
+    H = d // hd
+    da = H * hd
+    ks = jax.random.split(key, 12)
+    return {
+        "ln_att": jnp.ones((d,), dtype),
+        "ln_ffn": jnp.ones((d,), dtype),
+        "mu": 0.5 * jnp.ones((5, d), dtype),          # r,k,v,g,w shifts
+        "w_r": L.dense_init(ks[0], (d, da), dtype),
+        "w_k": L.dense_init(ks[1], (d, da), dtype),
+        "w_v": L.dense_init(ks[2], (d, da), dtype),
+        "w_g": L.dense_init(ks[3], (d, da), dtype),
+        "w_o": L.dense_init(ks[4], (da, d), dtype),
+        "w_base": jnp.full((da,), -6.0, dtype),       # decay ~ exp(-exp(-6))
+        "lora_a": L.dense_init(ks[5], (d, LORA_DIM), dtype),
+        "lora_b": L.dense_init(ks[6], (LORA_DIM, da), dtype, scale=0.01),
+        "u": L.dense_init(ks[7], (H, hd), dtype),     # bonus
+        "ln_x": jnp.ones((da,), dtype),               # per-head groupnorm
+        "mu_ck": 0.5 * jnp.ones((d,), dtype),
+        "mu_cr": 0.5 * jnp.ones((d,), dtype),
+        "w_ck": L.dense_init(ks[8], (d, cfg.d_ff), dtype),
+        "w_cv": L.dense_init(ks[9], (cfg.d_ff, d), dtype),
+        "w_cr": L.dense_init(ks[10], (d, d), dtype),
+    }
+
+
+def _rwkv_time_mix_proj(p, cfg, x, x_prev):
+    """x: (B,S,d); x_prev: shifted-by-one x.  Returns r,k,v,g,w (B,S,H,hd)."""
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    xx = x_prev - x
+    xr, xk, xv, xg, xw = [x + xx * p["mu"][i] for i in range(5)]
+    shp = x.shape[:-1] + (H, hd)
+    r = (xr @ p["w_r"]).reshape(shp)
+    k = (xk @ p["w_k"]).reshape(shp)
+    v = (xv @ p["w_v"]).reshape(shp)
+    g = jax.nn.silu(xg @ p["w_g"]).reshape(shp)
+    # data-dependent per-channel decay (the "Finch" contribution)
+    w_log = p["w_base"] + jnp.tanh(xw @ p["lora_a"]) @ p["lora_b"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(shp)
+    return r, k, v, g, w
+
+
+def _wkv_scan(r, k, v, w, u, state):
+    """Run the WKV recurrence over time.
+
+    r,k,v,w: (B,S,H,hd); u: (H,hd); state: (B,H,hd,hd) fp32.
+    Returns (y (B,S,H,hd), final state).  S[i,j] per head: key i, value j.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp             # each (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]          # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       s + u[..., :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, ys = lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1), state      # (B,S,H,hd)
+
+
+def _rwkv_channel_mix(p, cfg, x, x_prev):
+    xx = x_prev - x
+    xk = x + xx * p["mu_ck"]
+    xr = x + xx * p["mu_cr"]
+    k = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
+    return jax.nn.sigmoid(xr @ p["w_cr"]) * (k @ p["w_cv"])
+
+
+def _shift(x):
+    """(B,S,d) -> previous-token x, zeros at position 0."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def _rwkv_block_seq(p, cfg, x, state):
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    h = L.rms_norm(x, p["ln_att"], cfg.rms_eps)
+    r, k, v, g, w = _rwkv_time_mix_proj(p, cfg, h, _shift(h))
+    if cfg.ssm.chunk and x.shape[1] > cfg.ssm.chunk \
+            and jax.default_backend() == "tpu":
+        # VMEM-state-resident Pallas WKV kernel: HBM traffic drops from
+        # O(S·state) to O(S·hd) — §Perf.  TPU only: the interpret-mode
+        # lowering on CPU decomposes into HLO that *adds* traffic, so CPU
+        # keeps the scan (the kernel itself is validated in tests via
+        # interpret=True).
+        from repro.kernels.wkv import wkv
+        y, state = wkv(r, k, v, w, p["u"].astype(jnp.float32),
+                       state, cfg.ssm.chunk, False)
+    else:
+        y, state = _wkv_scan(r, k, v, w, p["u"].astype(jnp.float32), state)
+    B, S = x.shape[:2]
+    y = L.rms_norm(y.reshape(B, S, H * hd).astype(x.dtype), p["ln_x"],
+                   cfg.rms_eps) * g.reshape(B, S, H * hd).astype(x.dtype)
+    x = x + y @ p["w_o"]
+    h2 = L.rms_norm(x, p["ln_ffn"], cfg.rms_eps)
+    x = x + _rwkv_channel_mix(p, cfg, h2, _shift(h2))
+    # shift states for exact decode continuation: last normed hiddens
+    return x, state, h[:, -1], h2[:, -1]
+
+
+# ===========================================================================
+# Mamba2 (SSD)
+# ===========================================================================
+
+
+def _init_mamba_block(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    ks = jax.random.split(key, 4)
+    conv_ch = d_in + 2 * s.d_state
+    return {
+        "ln": jnp.ones((d,), dtype),
+        "in_proj": L.dense_init(
+            ks[0], (d, 2 * d_in + 2 * s.d_state + H), dtype),
+        "conv_w": L.dense_init(ks[1], (s.d_conv, conv_ch), dtype,
+                               scale=0.5),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((H,), dtype),
+        "d_skip": jnp.ones((H,), dtype),
+        "dt_bias": jnp.zeros((H,), dtype),
+        "ln_y": jnp.ones((d_in,), dtype),
+        "out_proj": L.dense_init(ks[2], (d_in, d), dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B,S,C); w: (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _mamba_split(p, cfg, x):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    proj = x @ p["in_proj"]
+    z, xc, Bc, Cc, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + s.d_state,
+               2 * d_in + 2 * s.d_state], axis=-1)
+    return z, xc, Bc, Cc, dt, d_in, H
+
+
+def _mamba_block_seq(p, cfg, x, conv_state, ssm_state):
+    """x: (B,S,d); conv_state: (B,K-1,C); ssm_state: (B,H,hd,N) fp32."""
+    s = cfg.ssm
+    z, xc, Bc, Cc, dt, d_in, H = _mamba_split(
+        p, cfg, L.rms_norm(x, p["ln"], cfg.rms_eps))
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    new_conv_state = conv_in[:, -(s.d_conv - 1):, :]
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + s.d_state], axis=-1)
+    B_, S = x.shape[:2]
+    xh = xc.reshape(B_, S, H, s.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)    # (B,S,H)
+    Bf = Bc.astype(jnp.float32)
+    Cf = Cc.astype(jnp.float32)
+
+    dtx = dt[..., None] * xh                                     # (B,S,H,hd)
+    Lc = s.chunk
+    if Lc and S > Lc and jax.default_backend() == "tpu":
+        # Mosaic SSD kernel: state + decay tiles VMEM-resident (§Perf A).
+        from repro.kernels.ssd import ssd
+        la = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt
+        ys, ssm_state = ssd(la, dtx, Bf, Cf, ssm_state, Lc, False)
+    elif Lc and S > Lc:
+        # log-decay directly (a = exp(la)): avoids the exp->log round trip
+        la = -jnp.exp(p["a_log"].astype(jnp.float32)) * dt       # (B,S,H)
+        pad = (-S) % Lc
+        if pad:
+            # identity-padding: decay 1 (la=0) + zero inputs leave the
+            # state untouched and contribute nothing.
+            padw = [(0, 0), (0, pad)]
+            la = jnp.pad(la, padw + [(0, 0)])
+            dtx_p = jnp.pad(dtx, padw + [(0, 0), (0, 0)])
+            Bp = jnp.pad(Bf, padw + [(0, 0)])
+            Cp = jnp.pad(Cf, padw + [(0, 0)])
+        else:
+            dtx_p, Bp, Cp = dtx, Bf, Cf
+        ys, ssm_state = _ssd_chunked_scan(la, dtx_p, Bp, Cp, ssm_state, Lc)
+        ys = ys[:, :S]
+    else:
+        def step(h, inp):
+            a_t, dtx_t, B_t, C_t = inp
+            # h: (B,H,hd,N)
+            h = a_t[..., None, None] * h \
+                + dtx_t[..., None] * B_t[:, None, None, :]
+            y = jnp.einsum("bhdn,bn->bhd", h, C_t)
+            return h, y
+
+        xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(dtx, 1, 0),
+              jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+        ssm_state, ys = lax.scan(step, ssm_state, xs)
+        ys = jnp.moveaxis(ys, 0, 1)
+    y = ys + p["d_skip"].astype(
+        jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["ln_y"], cfg.rms_eps)
+    return x + y @ p["out_proj"], new_conv_state, ssm_state
+
+
+def _ssd_chunked_scan(la, dtx, Bf, Cf, h0, Lc: int):
+    """Blocked (SSD) evaluation of the Mamba2 recurrence.
+
+        h_t = a_t h_{t-1} + dtx_t ⊗ B_t;   y_t = h_t · C_t
+
+    The per-timestep scan round-trips the (B,H,hd,N) state through HBM S
+    times; chunking makes that S/Lc round-trips and turns the within-chunk
+    work into MXU matmuls (the SSD duality).  All decay factors are
+    exp(non-positive sums) — numerically stable by construction.
+
+    la: (B,S,H) log-decay (<=0); dtx: (B,S,H,hd); Bf, Cf: (B,S,N);
+    h0: (B,H,hd,N) f32.  Returns (y (B,S,H,hd), h_final)."""
+    B, S, H = la.shape
+    hd = dtx.shape[-1]
+    N = Bf.shape[-1]
+    nc = S // Lc
+    la = la.reshape(B, nc, Lc, H)
+    dtx = dtx.reshape(B, nc, Lc, H, hd)
+    Bc = Bf.reshape(B, nc, Lc, N)
+    Cc = Cf.reshape(B, nc, Lc, N)
+    cum = jnp.cumsum(la, axis=2)                       # (B,nc,Lc,H)
+    tot = cum[:, :, -1]                                # (B,nc,H)
+
+    # ---- intra-chunk (token j -> token i >= j), batched matmuls ----
+    # w[i,j] = exp(cum_i - cum_j) for i >= j else 0
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,i,j,H)
+    mask = jnp.tril(jnp.ones((Lc, Lc), bool))
+    w = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)             # (B,nc,i,j)
+    y_intra = jnp.einsum("bcijh,bcij,bcjhd->bcihd", w, cb, dtx)
+
+    # ---- inter-chunk carry ----
+    # chunk contribution to the state: sum_j exp(tot - cum_j) dtx_j ⊗ B_j
+    wj = jnp.exp(tot[:, :, None] - cum)                    # (B,nc,Lc,H)
+    X = jnp.einsum("bcjh,bcjhd,bcjn->bchdn", wj, dtx, Bc)  # (B,nc,H,hd,N)
+
+    def chunk_step(h, inp):
+        cum_c, tot_c, C_c, X_c = inp
+        # y from the incoming state: exp(cum_i) * C_i · h
+        yh = jnp.einsum("bhdn,bin->bihd", h, C_c)          # (B,Lc,H,hd)
+        y_inter = jnp.exp(cum_c)[..., None] * yh           # cum_c: (B,Lc,H)
+        h = jnp.exp(tot_c)[..., None, None] * h + X_c
+        return h, y_inter
+
+    xs = (jnp.moveaxis(cum, 1, 0), jnp.moveaxis(tot, 1, 0),
+          jnp.moveaxis(Cc, 1, 0), jnp.moveaxis(X, 1, 0))
+    h_final, y_inter = lax.scan(chunk_step, h0, xs)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)                  # (B,nc,Lc,H,hd)
+    y = (y_intra + y_inter).reshape(B, S, H, hd)
+    return y, h_final
+
+
+# ===========================================================================
+# Model-level: pure SSM (rwkv6) and hybrid (zamba2)
+# ===========================================================================
+
+
+def _shared_block_init(key, cfg, dtype, n_sites):
+    k1, k2 = jax.random.split(key)
+    hd = cfg.resolved_head_dim
+    return {
+        "ln_attn": jnp.ones((n_sites, cfg.d_model), dtype),   # per-site scale
+        "ln_ffn": jnp.ones((cfg.d_model,), dtype),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, hd, dtype),
+        "ffn": L.init_ffn(k2, cfg.d_model, cfg.d_ff, "gelu", dtype),
+    }
+
+
+def init_params(key, cfg: ModelConfig, dtype=jnp.float32) -> Params:
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    p: Params = {
+        "embed": L.dense_init(ke, (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        "ln_out": jnp.ones((cfg.d_model,), dtype),
+        "head": L.dense_init(kh, (cfg.d_model, cfg.vocab), dtype),
+    }
+    if cfg.ssm.kind == "rwkv6":
+        blocks = [_init_rwkv_block(k, cfg, dtype)
+                  for k in jax.random.split(kl, cfg.n_layers)]
+    else:
+        blocks = [_init_mamba_block(k, cfg, dtype)
+                  for k in jax.random.split(kl, cfg.n_layers)]
+    p["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *blocks)
+    if cfg.arch_type == "hybrid":
+        p["shared"] = _shared_block_init(ks, cfg, dtype, n_sites(cfg))
+    return p
+
+
+def n_sites(cfg: ModelConfig) -> int:
+    return max(1, cfg.n_layers // cfg.hybrid_attn_every)
+
+
+def _site_after(cfg: ModelConfig, layer_idx: int) -> int:
+    """Return site index if a shared-attn application follows this layer."""
+    e = cfg.hybrid_attn_every
+    if (layer_idx + 1) % e == 0 and (layer_idx + 1) // e <= n_sites(cfg):
+        return (layer_idx + 1) // e - 1
+    return -1
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.float32) -> Dict[str, Any]:
+    s = cfg.ssm
+    Lr = cfg.n_layers
+    if s.kind == "rwkv6":
+        hd = s.head_dim
+        H = cfg.d_model // hd
+        cache = {
+            "wkv": jnp.zeros((Lr, batch, H, hd, hd), jnp.float32),
+            "att_shift": jnp.zeros((Lr, batch, cfg.d_model), dtype),
+            "ffn_shift": jnp.zeros((Lr, batch, cfg.d_model), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    else:
+        d_in = s.expand * cfg.d_model
+        H = d_in // s.head_dim
+        conv_ch = d_in + 2 * s.d_state
+        cache = {
+            "conv": jnp.zeros((Lr, batch, s.d_conv - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((Lr, batch, H, s.head_dim, s.d_state),
+                             jnp.float32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.arch_type == "hybrid":
+        hd = cfg.resolved_head_dim
+        cache["k"] = jnp.zeros((n_sites(cfg), batch, max_seq,
+                                cfg.n_kv_heads, hd), dtype)
+        cache["v"] = jnp.zeros_like(cache["k"])
+    return cache
+
+
+# --------------------------- full-sequence forward -------------------------
+
+
+def _shared_attn_seq(sp, cfg, x, site, positions):
+    h = L.rms_norm(x, sp["ln_attn"][site], cfg.rms_eps)
+    q, k, v = L.qkv_proj(sp["attn"], h, positions, cfg.rope_theta)
+    out = L.attention(q, k, v, causal=True)
+    x = x + L.out_proj(sp["attn"], out)
+    h = L.rms_norm(x, sp["ln_ffn"], cfg.rms_eps)
+    return x + L.apply_ffn(sp["ffn"], h, "gelu"), (k, v)
+
+
+def forward(params: Params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    logits, _ = _forward_with_cache(params, cfg, batch, None, remat=remat)
+    return logits, jnp.float32(0.0)
+
+
+def prefill(params, cfg, batch, max_seq, cache_dtype=None):
+    B = batch["tokens"].shape[0]
+    cache_dtype = cache_dtype or params["embed"].dtype
+    cache = init_cache(cfg, B, max_seq, cache_dtype)
+    logits, cache = _forward_with_cache(params, cfg, batch, cache)
+    return logits, cache
+
+
+def _forward_with_cache(params, cfg, batch, cache, *, remat=False):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = constrain_batch(params["embed"][tokens])
+    s = cfg.ssm
+    want_cache = cache is not None
+
+    if cfg.arch_type == "ssm":  # rwkv6 — homogeneous scan over layers
+        hd = s.head_dim
+        H = cfg.d_model // hd
+
+        def body(h, p):
+            st0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+            h, st, a_s, f_s = _rwkv_block_seq(p, cfg, h, st0)
+            return h, (st, a_s, f_s)
+
+        bodyf = jax.checkpoint(body) if remat else body
+        x, (wkv_states, a_s, f_s) = lax.scan(bodyf, x, params["blocks"])
+        if want_cache:
+            cache = dict(cache, wkv=wkv_states,
+                         att_shift=a_s.astype(cache["att_shift"].dtype),
+                         ffn_shift=f_s.astype(cache["ffn_shift"].dtype),
+                         pos=jnp.asarray(S, jnp.int32))
+    else:  # mamba2 backbone (pure or hybrid)
+        d_in = s.expand * cfg.d_model
+        H = d_in // s.head_dim
+        positions = jnp.arange(S)
+
+        def body(h, p):
+            cs0 = jnp.zeros((B, s.d_conv - 1, d_in + 2 * s.d_state), h.dtype)
+            st0 = jnp.zeros((B, H, s.head_dim, s.d_state), jnp.float32)
+            h, cs, st = _mamba_block_seq(p, cfg, h, cs0, st0)
+            return h, (cs, st)
+
+        if cfg.arch_type == "hybrid":
+            # unrolled over layers so the shared block can interleave; the
+            # mamba blocks between sites still share one traced body via scan
+            # groups of size hybrid_attn_every.
+            e = cfg.hybrid_attn_every
+            ns = n_sites(cfg)
+            kvs = []
+            blocks = params["blocks"]
+            li = 0
+            bodyf = jax.checkpoint(body) if remat else body
+            for site in range(ns):
+                take = jax.tree.map(lambda a: a[li:li + e], blocks)
+                x, sts = lax.scan(bodyf, x, take)
+                li += e
+                x, kv = _shared_attn_seq(params["shared"], cfg, x, site,
+                                         positions)
+                kvs.append((kv, sts))
+            if li < cfg.n_layers:
+                take = jax.tree.map(lambda a: a[li:], blocks)
+                x, sts = lax.scan(bodyf, x, take)
+                kvs.append((None, sts))
+            if want_cache:
+                conv_states = jnp.concatenate(
+                    [st[0] for _, st in kvs], axis=0)
+                ssm_states = jnp.concatenate(
+                    [st[1] for _, st in kvs], axis=0)
+                ks = jnp.stack([kv[0] for kv, _ in kvs if kv is not None])
+                vs = jnp.stack([kv[1] for kv, _ in kvs if kv is not None])
+
+                def write(c, kv):
+                    return lax.dynamic_update_slice_in_dim(
+                        c, kv.astype(c.dtype), 0, axis=1)
+
+                cache = dict(cache, conv=conv_states.astype(cache["conv"].dtype),
+                             ssm=ssm_states,
+                             k=jax.vmap(write)(cache["k"], ks),
+                             v=jax.vmap(write)(cache["v"], vs),
+                             pos=jnp.asarray(S, jnp.int32))
+        else:
+            bodyf = jax.checkpoint(body) if remat else body
+            x, (conv_states, ssm_states) = lax.scan(bodyf, x,
+                                                    params["blocks"])
+            if want_cache:
+                cache = dict(cache,
+                             conv=conv_states.astype(cache["conv"].dtype),
+                             ssm=ssm_states, pos=jnp.asarray(S, jnp.int32))
+
+    x = L.rms_norm(x, params["ln_out"], cfg.rms_eps)
+    logits = jnp.einsum("bsd,dv->bsv", x, params["head"])
+    return logits, cache
+
+
+# --------------------------- decode step ----------------------------------
+
+
+def _rwkv_block_step(p, cfg, x, wkv, att_shift, ffn_shift):
+    """x: (B,d) single token. Shifts are previous normed hiddens."""
+    hd = cfg.ssm.head_dim
+    H = cfg.d_model // hd
+    h = L.rms_norm(x, p["ln_att"], cfg.rms_eps)
+    r, k, v, g, w = jax.tree.map(
+        lambda a: a[:, 0],
+        _rwkv_time_mix_proj(p, cfg, h[:, None], att_shift[:, None]))
+    kv = k.astype(jnp.float32)[..., :, None] * \
+        v.astype(jnp.float32)[..., None, :]
+    u = p["u"].astype(jnp.float32)
+    y = jnp.einsum("bhi,bhij->bhj", r.astype(jnp.float32),
+                   wkv + u[..., :, None] * kv)
+    wkv = w.astype(jnp.float32)[..., :, None] * wkv + kv
+    B = x.shape[0]
+    y = L.rms_norm(y.reshape(B, H * hd).astype(x.dtype), p["ln_x"],
+                   cfg.rms_eps) * g.reshape(B, H * hd).astype(x.dtype)
+    x = x + y @ p["w_o"]
+    h2 = L.rms_norm(x, p["ln_ffn"], cfg.rms_eps)
+    out = _rwkv_channel_mix(p, cfg, h2[:, None], ffn_shift[:, None])[:, 0]
+    return x + out, wkv, h, h2
+
+
+def _mamba_block_step(p, cfg, x, conv_state, ssm_state):
+    """x: (B,d); conv_state: (B,K-1,C); ssm_state: (B,H,hd,N)."""
+    s = cfg.ssm
+    z, xc, Bc, Cc, dt, d_in, H = _mamba_split(
+        p, cfg, L.rms_norm(x, p["ln"], cfg.rms_eps))
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)          # (B,C)
+    window = jnp.concatenate([conv_state, conv_in[:, None]], axis=1)
+    conv_out = jax.nn.silu(
+        jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"])
+    new_conv_state = window[:, 1:]
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + s.d_state], axis=-1)
+    xh = xc.reshape(-1, H, s.head_dim).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(-jnp.exp(p["a_log"].astype(jnp.float32)) * dt)
+    h = a[..., None, None] * ssm_state + \
+        (dt[..., None] * xh)[..., None] * Bc.astype(jnp.float32)[:, None, None]
+    y = jnp.einsum("bhdn,bn->bhd", h, Cc.astype(jnp.float32))
+    y = y + p["d_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, d_in).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["ln_y"], cfg.rms_eps)
+    return x + y @ p["out_proj"], new_conv_state, h
+
+
+def _shared_attn_step(sp, cfg, x, site, k_cache, v_cache, pos):
+    """pos: () or (B,) — per-sequence positions for divergent speculative
+    acceptance (the serve engine commits different lengths per sequence)."""
+    h = L.rms_norm(x, sp["ln_attn"][site], cfg.rms_eps)
+    posv = jnp.atleast_1d(pos)[:, None]                    # (B|1, 1)
+    q, k, v = L.qkv_proj(sp["attn"], h[:, None], posv, cfg.rope_theta)
+    k_cache = L.cache_write(k_cache, k, pos)
+    v_cache = L.cache_write(v_cache, v, pos)
+    out = L.decode_attention(q, k_cache, v_cache, pos + 1)
+    x = x + L.out_proj(sp["attn"], out)[:, 0]
+    h = L.rms_norm(x, sp["ln_ffn"], cfg.rms_eps)
+    return x + L.apply_ffn(sp["ffn"], h, "gelu"), k_cache, v_cache
+
+
+def decode_step(params: Params, cfg: ModelConfig, token: jnp.ndarray,
+                cache: Dict[str, Any]) -> Tuple[jnp.ndarray, Dict[str, Any]]:
+    x = params["embed"][token]                                # (B,d)
+    pos = cache["pos"]
+    s = cfg.ssm
+
+    if cfg.arch_type == "ssm":  # rwkv6
+        def body(h, inner):
+            p, wkv, a_s, f_s = inner
+            h, wkv, new_a, new_f = _rwkv_block_step(p, cfg, h, wkv, a_s, f_s)
+            return h, (wkv, new_a, new_f)
+
+        x, (wkv, a_s, f_s) = lax.scan(
+            body, x, (params["blocks"], cache["wkv"], cache["att_shift"],
+                      cache["ffn_shift"]))
+        cache = dict(cache, wkv=wkv, att_shift=a_s.astype(cache["att_shift"].dtype),
+                     ffn_shift=f_s.astype(cache["ffn_shift"].dtype),
+                     pos=pos + 1)
+    elif cfg.arch_type == "hybrid":
+        e = cfg.hybrid_attn_every
+        ns = n_sites(cfg)
+        blocks = params["blocks"]
+
+        def body(h, inner):
+            p, cs, st = inner
+            h, cs, st = _mamba_block_step(p, cfg, h, cs, st)
+            return h, (cs, st)
+
+        conv_list, ssm_list, k_list, v_list = [], [], [], []
+        li = 0
+        for site in range(ns):
+            take = jax.tree.map(lambda a: a[li:li + e],
+                                (blocks, cache["conv"], cache["ssm"]))
+            x, (cs, st) = lax.scan(body, x, take)
+            conv_list.append(cs)
+            ssm_list.append(st)
+            li += e
+            x, kc, vc = _shared_attn_step(
+                params["shared"], cfg, x, site, cache["k"][site],
+                cache["v"][site], pos)
+            k_list.append(kc)
+            v_list.append(vc)
+        if li < cfg.n_layers:
+            take = jax.tree.map(lambda a: a[li:],
+                                (blocks, cache["conv"], cache["ssm"]))
+            x, (cs, st) = lax.scan(body, x, take)
+            conv_list.append(cs)
+            ssm_list.append(st)
+        cache = dict(cache,
+                     conv=jnp.concatenate(conv_list, axis=0),
+                     ssm=jnp.concatenate(ssm_list, axis=0),
+                     k=jnp.stack(k_list), v=jnp.stack(v_list),
+                     pos=pos + 1)
+    else:  # pure mamba2
+        def body(h, inner):
+            p, cs, st = inner
+            h, cs, st = _mamba_block_step(p, cfg, h, cs, st)
+            return h, (cs, st)
+
+        x, (conv, ssm_st) = lax.scan(
+            body, x, (params["blocks"], cache["conv"], cache["ssm"]))
+        cache = dict(cache, conv=conv, ssm=ssm_st, pos=pos + 1)
+
+    x = L.rms_norm(x, params["ln_out"], cfg.rms_eps)
+    logits = jnp.einsum("bd,dv->bv", x, params["head"])
+    return logits, cache

@@ -1,0 +1,469 @@
+"""Batched speculative-decoding engine with watermarking — Algorithm 1.
+
+One ``spec_step`` is the paper's full loop body, as a single jittable
+function over fixed shapes:
+
+  1. K sequential draft decode steps, each sampling a *watermarked* draft
+     token from ``Q_{ζ^D}`` (Gumbel-max / SynthID / plain);
+  2. one batched target verification of the K+1 fed tokens against the
+     KV/state cache (attention archs: ``extend_step``; SSM/hybrid archs:
+     a sequential scan with per-step state checkpoints for rollback);
+  3. accept/reject with **pseudorandom acceptance coins** u = G(ζ^R)
+     (Alg. 1 line 8) — or fresh uniforms in ``standard`` mode;
+  4. first-rejection residual sampling from the watermarked
+     ``(P−Q)_{+,ζ^T}``, bonus token from ``P_{ζ^T}`` when all accepted;
+  5. per-sequence commit: cache positions advance by ``out_len``;
+     recurrent states roll back by checkpoint selection.
+
+Divergent acceptance is handled with per-sequence cache positions (B,)
+throughout — no host-side re-batching.
+
+Repeated-context masking (Hu et al. 2024): a per-sequence history of used
+context hashes; a position whose context was already used samples from the
+*raw* distribution with non-watermark randomness, preserving sequence-level
+unbiasedness.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import prf, speculative as spec
+from repro.core import watermark as _wm  # noqa: F401  (register decoders)
+from repro.core.watermark.base import Decoder, get_decoder
+from repro.models import model as M
+
+EPS = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    K: int = 4                   # lookahead
+    ctx_window: int = 4          # context-hash window c
+    temperature: float = 1.0
+    watermark: str = "gumbel"    # gumbel | synthid | synthid-inf | none
+    m: int = 30                  # synthid tournament rounds
+    accept: str = "pseudorandom"  # pseudorandom (Alg. 1) | standard
+    mask_repeated: bool = True
+    history_cap: int = 1024      # repeated-context history buffer size
+
+
+def _plain_decoder() -> Decoder:
+    """No watermark: categorical sampling with non-recoverable randomness."""
+    def dist(probs, key, ctx_hash, stream=0):
+        return probs
+
+    def sample(probs, key, ctx_hash, stream=0):
+        u = prf.uniform_from(key, ctx_hash, prf.STREAM_PLAIN + stream + 13)
+        cdf = jnp.cumsum(probs / jnp.maximum(probs.sum(), EPS))
+        tok = jnp.minimum(jnp.searchsorted(cdf, u), probs.shape[-1] - 1)
+        return tok, jnp.zeros(())
+
+    def recover(tokens, key, ctx_hashes, stream, vocab):
+        return jnp.zeros(tokens.shape, jnp.float32)
+
+    return Decoder(name="none", modified_dist=dist, sample=sample,
+                   recover_stats=recover, stat_dim=1, degenerate=False)
+
+
+def make_decoder(scfg: SpecConfig) -> Decoder:
+    if scfg.watermark == "none":
+        return _plain_decoder()
+    kw = {"m": scfg.m} if scfg.watermark.startswith("synthid") else {}
+    return get_decoder(scfg.watermark, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Engine state (a plain dict pytree so it jits/shards cleanly)
+# ---------------------------------------------------------------------------
+
+RECURRENT_KEYS = ("wkv", "att_shift", "ffn_shift", "conv", "ssm")
+
+
+def _is_recurrent(cfg: ModelConfig) -> bool:
+    return cfg.arch_type in ("ssm", "hybrid")
+
+
+def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
+               scfg: SpecConfig, prompts: jnp.ndarray, max_seq: int, key,
+               cache_dtype=None, extras: Optional[Dict[str, Any]] = None
+               ) -> Dict[str, Any]:
+    """Prefill both models on ``prompts`` (B, S0) and sample the first token
+    from the watermarked target prefill logits.  ``extras`` carries modality
+    inputs for the stub frontends ("audio_emb" / "image_emb") — target only;
+    the draft is always a text-only LM."""
+    B, S0 = prompts.shape
+    dec = make_decoder(scfg)
+    t_batch = {"tokens": prompts, **(extras or {})}
+    t_logits, t_cache = M.prefill(t_params, tcfg, t_batch,
+                                  max_seq, cache_dtype=cache_dtype)
+    _, d_cache = M.prefill(d_params, dcfg, {"tokens": prompts}, max_seq,
+                           cache_dtype=cache_dtype)
+    c = scfg.ctx_window
+    window = prompts[:, -c:]
+    if window.shape[1] < c:
+        window = jnp.pad(window, ((0, 0), (c - window.shape[1], 0)))
+    ctx0 = prf.context_hash(window)
+    p0 = jax.nn.softmax(
+        t_logits[:, -1].astype(jnp.float32) / scfg.temperature, -1)
+    first, _ = jax.vmap(
+        lambda pr, ch: dec.sample(pr, key, ch, prf.STREAM_TARGET))(p0, ctx0)
+    first = first.astype(jnp.int32)
+    window = jnp.concatenate([window[:, 1:], first[:, None]], axis=1)
+    hist = jnp.zeros((B, scfg.history_cap), jnp.uint32)
+    hist = hist.at[:, 0].set(ctx0)
+    # per-sequence positions from the start (divergent acceptance later)
+    t_cache = dict(t_cache, pos=jnp.full((B,), S0, jnp.int32))
+    d_cache = dict(d_cache, pos=jnp.full((B,), S0, jnp.int32))
+    return {
+        "t_cache": t_cache,
+        "d_cache": d_cache,
+        "window": window,          # (B, c) — ends at the pending last token
+        "last": first,             # (B,) committed but not yet consumed
+        "n_committed": jnp.full((B,), S0 + 1, jnp.int32),
+        "hist": hist,              # (B, H) used context hashes
+        "hist_n": jnp.ones((B,), jnp.int32),
+        "step_idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_state(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
+                   batch: int, max_seq: int, cache_dtype=jnp.bfloat16
+                   ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-in of the engine state (dry-run lowering)."""
+    t_cache = M.abstract_cache(tcfg, batch, max_seq, cache_dtype)
+    d_cache = M.abstract_cache(dcfg, batch, max_seq, cache_dtype)
+    t_cache = dict(t_cache, pos=jax.ShapeDtypeStruct((batch,), jnp.int32))
+    d_cache = dict(d_cache, pos=jax.ShapeDtypeStruct((batch,), jnp.int32))
+    c = scfg.ctx_window
+    sds = jax.ShapeDtypeStruct
+    return {
+        "t_cache": t_cache,
+        "d_cache": d_cache,
+        "window": sds((batch, c), jnp.int32),
+        "last": sds((batch,), jnp.int32),
+        "n_committed": sds((batch,), jnp.int32),
+        "hist": sds((batch, scfg.history_cap), jnp.uint32),
+        "hist_n": sds((batch,), jnp.int32),
+        "step_idx": sds((), jnp.int32),
+    }
+
+
+class StepOutput(NamedTuple):
+    out_tokens: jnp.ndarray    # (B, K+1) int32, zero-padded past out_len
+    out_len: jnp.ndarray       # (B,) int32 in [1, K+1]
+    n_accepted: jnp.ndarray    # (B,) int32 in [0, K]
+    from_draft: jnp.ndarray    # (B, K+1) bool
+    u: jnp.ndarray             # (B, K) acceptance coins
+    ctx_hashes: jnp.ndarray    # (B, K+1) uint32, per emitted-slot context
+    masked: jnp.ndarray        # (B, K+1) bool — repeated-context positions
+
+
+# ---------------------------------------------------------------------------
+# The speculative step
+# ---------------------------------------------------------------------------
+
+
+def _seen_in_history(hist, hist_n, ctx_h):
+    valid = jnp.arange(hist.shape[1])[None, :] < hist_n[:, None]
+    return ((hist == ctx_h[:, None]) & valid).any(axis=-1)
+
+
+def _wm_sample_batch(dec, probs, key, ctx_h, stream, seen, fallback_stream):
+    """Watermarked sample per sequence; repeated contexts fall back to raw
+    categorical sampling with a non-watermark stream."""
+    tok_wm, _ = jax.vmap(
+        lambda pr, ch: dec.sample(pr, key, ch, stream))(probs, ctx_h)
+
+    def raw(pr, ch):
+        u = prf.uniform_from(key, ch, fallback_stream)
+        cdf = jnp.cumsum(pr / jnp.maximum(pr.sum(), EPS))
+        return jnp.minimum(jnp.searchsorted(cdf, u), pr.shape[-1] - 1)
+
+    tok_raw = jax.vmap(raw)(probs, ctx_h)
+    return jnp.where(seen, tok_raw, tok_wm).astype(jnp.int32)
+
+
+def _gather_probs(probs, tokens):
+    """probs (B, V), tokens (B,) -> (B,)"""
+    return jnp.take_along_axis(probs, tokens[:, None].astype(jnp.int32),
+                               axis=-1)[:, 0]
+
+
+def _run_target(t_params, tcfg, fed_tokens, t_cache):
+    """Run K+1 fed tokens through the target.  Attention archs: one batched
+    extend; recurrent archs: sequential scan with state checkpoints.
+
+    Returns (logits (B, K+1, V), new_cache, checkpoints|None) where
+    checkpoints maps recurrent cache keys to (K+1, ...) stacked states."""
+    if not _is_recurrent(tcfg):
+        from repro.models import transformer as T
+        logits, cache = T.extend_step(t_params, tcfg, fed_tokens, t_cache)
+        return logits, cache, None
+
+    def body(cache, tok):
+        logits, cache = M.decode_step(t_params, tcfg, tok, cache)
+        chk = {k: cache[k] for k in RECURRENT_KEYS if k in cache}
+        return cache, (logits, chk)
+
+    cache, (logits, chks) = jax.lax.scan(body, t_cache, fed_tokens.T)
+    return logits.transpose(1, 0, 2), cache, chks
+
+
+def _rollback(cache, checkpoints, pos0, out_len):
+    """Commit per-sequence: positions advance by out_len; recurrent states
+    select the checkpoint after ``out_len`` consumed tokens."""
+    cache = dict(cache, pos=pos0 + out_len)
+    if checkpoints:
+        for k, chk in checkpoints.items():
+            # chk: (steps, L, B, ...); select step out_len-1 per sequence.
+            # batch axis is axis 2 of chk / axis 1 of cache[k].
+            sel = jax.vmap(lambda c, n: c[n], in_axes=(2, 0), out_axes=1)(
+                chk, out_len - 1)
+            cache[k] = sel.astype(cache[k].dtype) \
+                if hasattr(cache[k], "dtype") else sel
+    return cache
+
+
+def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
+                   ) -> Callable:
+    """Build the jittable spec_step(t_params, d_params, state, key)
+    -> (state, StepOutput).  ``key`` is the watermark key (static stream
+    derivation) — in ``standard`` accept mode it also feeds fresh coins."""
+    dec = make_decoder(scfg)
+    K, c = scfg.K, scfg.ctx_window
+    temp = scfg.temperature
+
+    def step(t_params, d_params, state, key):
+        t_cache, d_cache = state["t_cache"], state["d_cache"]
+        window, last = state["window"], state["last"]
+        hist, hist_n = state["hist"], state["hist_n"]
+        B = last.shape[0]
+        t_pos0 = t_cache["pos"]
+        d_pos0 = d_cache["pos"]
+
+        # ---- 1. draft K tokens sequentially --------------------------------
+        d_recurrent = _is_recurrent(dcfg)
+
+        def draft_body(carry, _):
+            d_cache, cur, window = carry
+            logits, d_cache = M.decode_step(d_params, dcfg, cur, d_cache)
+            q_full = jax.nn.softmax(logits.astype(jnp.float32) / temp, -1)
+            ctx_h = prf.context_hash(window)
+            seen = (_seen_in_history(hist, hist_n, ctx_h)
+                    if scfg.mask_repeated else jnp.zeros((B,), bool))
+            tok = _wm_sample_batch(dec, q_full, key, ctx_h,
+                                   prf.STREAM_DRAFT, seen,
+                                   prf.STREAM_PLAIN + 1)
+            window = jnp.concatenate([window[:, 1:], tok[:, None]], axis=1)
+            chk = ({k: d_cache[k] for k in RECURRENT_KEYS if k in d_cache}
+                   if d_recurrent else 0)
+            return (d_cache, tok, window), (tok, q_full, ctx_h, seen, chk)
+
+        (d_cache, _, window_k), \
+            (draft_toks, q_fulls, ctx_hs, seens, d_chks) = \
+            jax.lax.scan(draft_body, (d_cache, last, window), None, length=K)
+        draft_toks = draft_toks.T                       # (B, K)
+        q_fulls = q_fulls.transpose(1, 0, 2)            # (B, K, V)
+        ctx_hs = ctx_hs.T                               # (B, K)
+        seens = seens.T                                 # (B, K)
+        # bonus-slot context hash (after d_K)
+        ctx_bonus = prf.context_hash(window_k)          # (B,)
+        seen_bonus = (_seen_in_history(hist, hist_n, ctx_bonus)
+                      if scfg.mask_repeated else jnp.zeros((B,), bool))
+
+        # ---- 2. target verification ----------------------------------------
+        fed = jnp.concatenate([last[:, None], draft_toks], axis=1)  # (B,K+1)
+        t_logits, t_cache, t_chks = _run_target(t_params, tcfg, fed, t_cache)
+        p_fulls = jax.nn.softmax(t_logits.astype(jnp.float32) / temp, -1)
+
+        # ---- 3. acceptance coins -------------------------------------------
+        if scfg.accept == "pseudorandom":
+            u = jax.vmap(jax.vmap(lambda ch: prf.accept_uniform(key, ch)))(
+                ctx_hs)                                   # (B, K)
+        else:
+            u = jax.random.uniform(
+                jax.random.fold_in(key, state["step_idx"]), (B, K))
+
+        p_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
+            p_fulls[:, :K], draft_toks)                   # (B, K)
+        q_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
+            q_fulls, draft_toks)                          # (B, K)
+        a = jnp.minimum(1.0, p_of_draft / jnp.maximum(q_of_draft, EPS))
+        ok = u < a
+        prefix = jnp.cumprod(ok.astype(jnp.int32), axis=-1).astype(bool)
+        n_acc = prefix.sum(axis=-1).astype(jnp.int32)     # (B,)
+        all_ok = n_acc == K
+
+        # ---- 4. residual / bonus sampling (watermarked, ζ^T) ----------------
+        resid = spec.residual_dist(p_fulls[:, :K], q_fulls)       # (B, K, V)
+        resid_toks = jax.vmap(
+            lambda pr, ch, sn: _wm_sample_batch(
+                dec, pr, key, ch, prf.STREAM_TARGET, sn,
+                prf.STREAM_PLAIN + 2),
+            in_axes=(1, 1, 1), out_axes=1)(resid, ctx_hs, seens)  # (B, K)
+        bonus_tok = _wm_sample_batch(dec, p_fulls[:, K], key, ctx_bonus,
+                                     prf.STREAM_TARGET, seen_bonus,
+                                     prf.STREAM_PLAIN + 3)        # (B,)
+
+        # ---- 5. assemble outputs -------------------------------------------
+        out = jnp.zeros((B, K + 1), jnp.int32)
+        out = out.at[:, :K].set(jnp.where(prefix, draft_toks, 0))
+        extra = jnp.where(
+            all_ok, bonus_tok,
+            jnp.take_along_axis(resid_toks,
+                                jnp.minimum(n_acc, K - 1)[:, None],
+                                axis=1)[:, 0])
+        out = jax.vmap(lambda o, n, e: o.at[n].set(e))(out, n_acc, extra)
+        out_len = n_acc + 1
+        from_draft = jnp.arange(K + 1)[None, :] < n_acc[:, None]
+        all_hashes = jnp.concatenate([ctx_hs, ctx_bonus[:, None]], axis=1)
+        all_seen = jnp.concatenate([seens, seen_bonus[:, None]], axis=1)
+
+        # ---- 6. commit -------------------------------------------------------
+        t_cache = _rollback(t_cache, t_chks, t_pos0, out_len)
+        # draft consumed [last, d_1..d_{K-1}]; one catch-up step consumes d_K
+        # so the all-accepted path has the full prefix in cache.
+        _, d_cache = M.decode_step(d_params, dcfg, draft_toks[:, K - 1],
+                                   d_cache)
+        if d_recurrent:
+            last_chk = {k: d_cache[k] for k in RECURRENT_KEYS
+                        if k in d_cache}
+            d_chks = jax.tree.map(
+                lambda seq, fin: jnp.concatenate([seq, fin[None]], axis=0),
+                d_chks, last_chk)
+            d_cache = _rollback(d_cache, d_chks, d_pos0, out_len)
+        else:
+            d_cache = dict(d_cache, pos=d_pos0 + out_len)
+        # rebuild window/last from the *emitted* tokens
+        full = jnp.concatenate([window, out], axis=1)     # (B, c+K+1)
+        idx = out_len[:, None] + jnp.arange(c)[None, :]   # window ending at n'
+        new_window = jnp.take_along_axis(full, idx, axis=1)
+        new_last = jnp.take_along_axis(out, (out_len - 1)[:, None],
+                                       axis=1)[:, 0]
+        # history append for emitted, previously-unseen contexts
+        if scfg.mask_repeated:
+            emitted = jnp.arange(K + 1)[None, :] < out_len[:, None]
+            add = emitted & ~all_seen                     # (B, K+1)
+
+            def upd(h, n, hs, ad):
+                def one(carry, sa):
+                    h, n = carry
+                    hh, a_ = sa
+                    h = jax.lax.select(
+                        a_, h.at[n % h.shape[0]].set(hh), h)
+                    return (h, n + a_.astype(jnp.int32)), None
+                (h, n), _ = jax.lax.scan(one, (h, n), (hs, ad))
+                return h, n
+
+            hist, hist_n = jax.vmap(upd)(hist, hist_n, all_hashes, add)
+
+        new_state = dict(state, t_cache=t_cache, d_cache=d_cache,
+                         window=new_window, last=new_last,
+                         n_committed=state["n_committed"] + out_len,
+                         hist=hist, hist_n=hist_n,
+                         step_idx=state["step_idx"] + 1)
+        return new_state, StepOutput(
+            out_tokens=out, out_len=out_len, n_accepted=n_acc,
+            from_draft=from_draft, u=u, ctx_hashes=all_hashes,
+            masked=all_seen)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Recurrent-state checkpoint note: _run_target returns per-step stacked
+# recurrent states with layout (steps, L, B, ...) — `_rollback` selects
+# per-sequence along the steps axis.
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=64)
+def jitted_spec_step(tcfg: ModelConfig, dcfg: ModelConfig,
+                     scfg: SpecConfig) -> Callable:
+    """Configs are frozen dataclasses — cache the jitted step so repeated
+    ``generate`` calls don't retrace."""
+    return jax.jit(make_spec_step(tcfg, dcfg, scfg))
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, N) committed tokens (post-prompt)
+    lengths: np.ndarray         # (B,) valid lengths
+    from_draft: np.ndarray      # (B, N) int8
+    u: np.ndarray               # (B, N) coins aligned to emitted slots
+    ctx_hashes: np.ndarray      # (B, N) uint32
+    masked: np.ndarray          # (B, N) bool
+    aatps: float                # average accepted tokens per step
+    n_steps: int
+
+
+def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
+             scfg: SpecConfig, prompts, *, n_tokens: int, key,
+             max_seq: Optional[int] = None,
+             extras: Optional[Dict[str, Any]] = None) -> GenerationResult:
+    """Host loop: run spec steps until every sequence has ≥ n_tokens."""
+    B, S0 = prompts.shape
+    max_steps = int(np.ceil(n_tokens / 1.0))  # worst case 1 token/step
+    # a fast sequence can commit K+1 tokens on every step while the slowest
+    # commits 1 — size the cache for the worst case so writes never clip.
+    max_seq = max_seq or (S0 + 1 + (scfg.K + 1) * max_steps + 2)
+    state = init_state(t_params, d_params, tcfg, dcfg, scfg, prompts,
+                       max_seq, key, extras=extras)
+    step = jitted_spec_step(tcfg, dcfg, scfg)
+
+    K1 = scfg.K + 1
+    toks = np.zeros((B, n_tokens + K1 + 1), np.int32)
+    fd = np.zeros_like(toks, np.int8)
+    us = np.zeros(toks.shape, np.float32)
+    chs = np.zeros(toks.shape, np.uint32)
+    msk = np.zeros(toks.shape, bool)
+    # slot 0 = the first token sampled at prefill (from target, ζ^T, ctx =
+    # prompt tail)
+    toks[:, 0] = np.asarray(state["last"])
+    fd[:, 0] = 1
+    c = scfg.ctx_window
+    w0 = prompts[:, -c:]
+    if w0.shape[1] < c:
+        w0 = jnp.pad(w0, ((0, 0), (c - w0.shape[1], 0)))
+    chs[:, 0] = np.asarray(prf.context_hash(w0))
+    us[:, 0] = np.asarray(jax.vmap(
+        lambda ch: prf.accept_uniform(key, ch))(prf.context_hash(w0)))
+    lens = np.ones((B,), np.int32)
+    total_emitted = 0
+    n_steps = 0
+    for _ in range(max_steps):
+        if lens.min() >= n_tokens:
+            break
+        state, outp = step(t_params, d_params, state, key)
+        o_t = np.asarray(outp.out_tokens)
+        o_l = np.asarray(outp.out_len)
+        o_f = np.asarray(outp.from_draft)
+        o_u = np.concatenate(
+            [np.asarray(outp.u), np.zeros((B, 1), np.float32)], axis=1)
+        o_h = np.asarray(outp.ctx_hashes)
+        o_m = np.asarray(outp.masked)
+        for b in range(B):
+            n = min(int(o_l[b]), toks.shape[1] - int(lens[b]))
+            if n <= 0:
+                continue
+            sl = slice(lens[b], lens[b] + n)
+            toks[b, sl] = o_t[b, :n]
+            fd[b, sl] = ~o_f[b, :n]     # src: 0 = draft, 1 = target
+            us[b, sl] = o_u[b, :n]
+            chs[b, sl] = o_h[b, :n]
+            msk[b, sl] = o_m[b, :n]
+            lens[b] += n
+        total_emitted += int(o_l.sum())
+        n_steps += 1
+    aatps = total_emitted / max(n_steps * B, 1)
+    return GenerationResult(tokens=toks, lengths=lens, from_draft=fd,
+                            u=us, ctx_hashes=chs, masked=msk,
+                            aatps=float(aatps), n_steps=n_steps)

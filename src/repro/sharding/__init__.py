@@ -1,0 +1,10 @@
+"""Sharding rules for the production mesh (see rules.py)."""
+from repro.sharding.rules import (  # noqa: F401
+    batch_spec,
+    cache_specs,
+    logits_spec,
+    opt_state_specs,
+    param_shardings,
+    param_specs,
+    spec_for_shape,
+)

@@ -1,0 +1,99 @@
+"""Training loop substrate: LM loss, jitted train_step factory, simple fit
+helper for the CPU examples.  The same ``train_step`` (with pjit shardings)
+is what the multi-pod dry-run lowers for the train_4k shape.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.optim import adamw
+
+
+def lm_loss(params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: bool = False, lb_coef: float = 0.01):
+    """Next-token cross entropy (+ MoE load-balance aux)."""
+    tokens = batch["tokens"]
+    inputs = {**batch, "tokens": tokens[:, :-1]}
+    labels = tokens[:, 1:]
+    logits, aux = M.forward(params, cfg, inputs, remat=remat)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels != 0).astype(jnp.float32)
+    loss = jnp.sum(nll * mask) / jnp.maximum(mask.sum(), 1.0)
+    return loss + lb_coef * aux, {"ce": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig, *,
+                    remat: bool = False, microbatches: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    NOT jitted here — the caller wraps with jax.jit(+shardings); the dry-run
+    lowers exactly this function on the production mesh.
+
+    ``microbatches`` > 1 accumulates gradients over a ``lax.scan`` of
+    microbatch slices: the live activation set shrinks by the same factor,
+    which is what lets the 340B/1T-class configs fit per-device HBM at
+    global batch 256 (see EXPERIMENTS.md §Perf).
+    """
+    def grads_of(params, batch):
+        return jax.value_and_grad(lm_loss, has_aux=True)(
+            params, cfg, batch, remat=remat)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, extras), grads = grads_of(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches)
+                                 + x.shape[1:])
+
+            mb = jax.tree.map(reshape, batch)
+
+            def acc_body(carry, mb_i):
+                g_acc, l_acc, a_acc = carry
+                (loss, extras), g = grads_of(params, mb_i)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + extras["ce"], a_acc + extras["aux"]), \
+                    None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, ce, aux), _ = jax.lax.scan(
+                acc_body, (g0, jnp.float32(0.0), jnp.float32(0.0)), mb)
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = ce * inv + 0.01 * aux * inv
+            extras = {"ce": ce * inv, "aux": aux * inv}
+        params, opt_state, om = adamw.apply(opt_cfg, params, grads, opt_state)
+        metrics = {"loss": loss, **extras, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def fit(cfg: ModelConfig, data_iter, *, steps: int, seed: int = 0,
+        opt_cfg: adamw.AdamWConfig = None, log_every: int = 50,
+        params=None, verbose: bool = True):
+    """CPU-scale convenience trainer used by examples/tests."""
+    opt_cfg = opt_cfg or adamw.AdamWConfig(total_steps=steps, warmup_steps=20)
+    if params is None:
+        params = M.init_params(jax.random.key(seed), cfg)
+    opt_state = adamw.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg))
+    hist = []
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(data_iter).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if verbose and (i % log_every == 0 or i == steps - 1):
+            print(f"  step {i:4d} loss={float(m['loss']):.4f} "
+                  f"lr={float(m['lr']):.2e} gnorm={float(m['grad_norm']):.2f}")
+        hist.append(float(m["loss"]))
+    return params, hist

@@ -1,0 +1,14 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — smoke tests and benches see
+the real single CPU device; only launch/dryrun.py forces 512 devices."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.key(20260711)
+
+
+def simplex(key, shape, temp=1.0):
+    return jax.nn.softmax(jax.random.normal(key, shape) * temp, axis=-1)

@@ -1,0 +1,149 @@
+"""Speculative serving engine (Alg. 1 operationalized): determinism,
+state-rollback exactness, AATPS bounds, commit consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, get_smoke_config
+from repro.models import model as M
+from repro.serve import engine as E
+
+V = 96
+KEY = jax.random.key(1234)
+
+
+def _tiny(arch, **kw):
+    return get_smoke_config(arch, vocab=V, d_model=64, d_ff=128, n_heads=2,
+                            n_kv_heads=2, head_dim=32, **kw)
+
+
+@pytest.fixture(scope="module")
+def dense_pair():
+    tcfg = _tiny("yi-6b")
+    dcfg = get_smoke_config("yi-6b", n_layers=1, vocab=V, d_model=32,
+                            d_ff=64, n_heads=2, n_kv_heads=2, head_dim=16)
+    tp = M.init_params(jax.random.key(0), tcfg)
+    dp = M.init_params(jax.random.key(1), dcfg)
+    return tcfg, dcfg, tp, dp
+
+
+PROMPTS = jax.random.randint(jax.random.key(2), (3, 8), 1, V)
+
+
+def test_determinism(dense_pair):
+    tcfg, dcfg, tp, dp = dense_pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    r1 = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=20, key=KEY)
+    r2 = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=20, key=KEY)
+    assert np.array_equal(r1.tokens, r2.tokens)
+    assert np.array_equal(r1.from_draft, r2.from_draft)
+    # different key -> different text
+    r3 = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=20,
+                    key=jax.random.key(777))
+    assert not np.array_equal(r1.tokens, r3.tokens)
+
+
+def test_aatps_bounds(dense_pair):
+    tcfg, dcfg, tp, dp = dense_pair
+    for wm in ("gumbel", "none"):
+        scfg = E.SpecConfig(K=3, watermark=wm, accept="pseudorandom"
+                            if wm != "none" else "standard")
+        r = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=16,
+                       key=KEY)
+        assert 1.0 <= r.aatps <= 4.0
+
+
+@pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b", "zamba2-1.2b"])
+def test_target_state_commit_consistency(arch, dense_pair):
+    """After a spec step, the target cache must equal a fresh prefill over
+    exactly the committed tokens (positions, KV entries, recurrent states)."""
+    _, dcfg, _, dp = dense_pair
+    tcfg = _tiny(arch)
+    tp = M.init_params(jax.random.key(0), tcfg)
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    state = E.init_state(tp, dp, tcfg, dcfg, scfg, PROMPTS, 64, KEY)
+    step = jax.jit(E.make_spec_step(tcfg, dcfg, scfg))
+    st, out = step(tp, dp, state, KEY)
+    st, out2 = step(tp, dp, st, KEY)  # two steps (divergent per-seq pos)
+    for b in range(PROMPTS.shape[0]):
+        committed = list(np.asarray(PROMPTS[b]))
+        committed.append(int(state["last"][b]))
+        n1, n2 = int(out.out_len[b]), int(out2.out_len[b])
+        committed += list(np.asarray(out.out_tokens[b, :n1]))
+        committed += list(np.asarray(out2.out_tokens[b, :n2]))
+        toks = jnp.asarray(committed[:-1])[None]
+        _, ref_cache = M.prefill(tp, tcfg, {"tokens": toks}, 64)
+        got = st["t_cache"]
+        assert int(got["pos"][b]) == len(committed) - 1
+        npos = len(committed) - 1
+        for k in ("wkv", "ssm", "conv", "att_shift", "ffn_shift"):
+            if k in ref_cache:
+                np.testing.assert_allclose(
+                    np.asarray(ref_cache[k][:, 0], np.float32),
+                    np.asarray(got[k][:, b], np.float32),
+                    rtol=2e-2, atol=2e-3, err_msg=f"{arch}/{k}")
+        for k in ("k", "v"):
+            if k in ref_cache:
+                np.testing.assert_allclose(
+                    np.asarray(ref_cache[k][:, 0, :npos], np.float32),
+                    np.asarray(got[k][:, b, :npos], np.float32),
+                    rtol=2e-2, atol=2e-3, err_msg=f"{arch}/{k}")
+
+
+def test_spec_engine_is_lossless_in_distribution():
+    """Unbiasedness of the FULL speculative path (draft + pseudorandom
+    accept + residual/bonus): the empirical marginal of the first
+    loop-emitted token over many watermark keys must match the analytic
+    two-step marginal  P(w2) = Σ_w1 P(w1|prompt) P(w2|prompt,w1).
+
+    Uses a tiny vocabulary so the TV estimate is well-powered."""
+    v = 16
+    tcfg = get_smoke_config("yi-6b", vocab=v, d_model=32, d_ff=64,
+                            n_heads=2, n_kv_heads=2, head_dim=16,
+                            n_layers=1)
+    dcfg = get_smoke_config("yi-6b", vocab=v, d_model=16, d_ff=32,
+                            n_heads=1, n_kv_heads=1, head_dim=16,
+                            n_layers=1)
+    tp = M.init_params(jax.random.key(0), tcfg)
+    dp = M.init_params(jax.random.key(1), dcfg)
+    prompts = jax.random.randint(jax.random.key(2), (1, 6), 1, v)
+
+    # analytic marginal of token 2 over all first tokens
+    logits, _ = M.forward(tp, tcfg, {"tokens": prompts})
+    p1 = np.asarray(jax.nn.softmax(logits[0, -1].astype(jnp.float32)))
+    ext = jnp.concatenate(
+        [jnp.tile(prompts, (v, 1)), jnp.arange(v)[:, None]], axis=1)
+    logits2, _ = M.forward(tp, tcfg, {"tokens": ext})
+    p2_given = np.asarray(
+        jax.nn.softmax(logits2[:, -1].astype(jnp.float32), -1))
+    p2 = p1 @ p2_given
+
+    scfg = E.SpecConfig(K=2, watermark="gumbel", accept="pseudorandom")
+    step = E.make_spec_step(tcfg, dcfg, scfg)
+    n = 512
+
+    @jax.jit
+    def first_emitted(seed):
+        key = jax.random.key(seed)
+        state = E.init_state(tp, dp, tcfg, dcfg, scfg, prompts, 16, key)
+        _, out = step(tp, dp, state, key)
+        return out.out_tokens[0, 0]
+
+    toks = jax.vmap(first_emitted)(jnp.arange(n) + 1000)
+    counts = np.bincount(np.asarray(toks), minlength=v)[:v]
+    tvd = 0.5 * np.abs(counts / n - p2).sum()
+    assert tvd < 0.12, tvd
+
+
+def test_repeated_context_masking_flags(dense_pair):
+    """Forcing a degenerate prompt makes contexts repeat; the engine must
+    mark them (and still emit valid tokens)."""
+    tcfg, dcfg, tp, dp = dense_pair
+    prompts = jnp.ones((2, 8), jnp.int32) * 5
+    scfg = E.SpecConfig(K=2, watermark="gumbel", mask_repeated=True)
+    r = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=24, key=KEY)
+    assert r.tokens.min() >= 0
+    # masked positions are recorded (degenerate contexts repeat quickly
+    # unless generation immediately diversifies; just check the field works)
+    assert r.masked.dtype == bool

@@ -1,0 +1,132 @@
+"""PRF substrate, data pipeline, checkpoint IO, hlocost parser."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prf
+
+KEY = jax.random.key(5)
+
+
+class TestPRF:
+    def test_context_hash_order_dependent(self):
+        a = prf.context_hash(jnp.array([1, 2, 3, 4]))
+        b = prf.context_hash(jnp.array([4, 3, 2, 1]))
+        assert int(a) != int(b)
+
+    def test_sliding_hashes_match_manual(self):
+        toks = jnp.array([[5, 6, 7, 8, 9]])
+        c = 3
+        hs = prf.sliding_context_hashes(toks, c)
+        # position 3 is hashed from tokens[0:3]
+        manual = prf.context_hash(toks[0, 0:3])
+        assert int(hs[0, 3]) == int(manual)
+        # position 0 from left-padding
+        pad = prf.context_hash(jnp.zeros(3, jnp.int32))
+        assert int(hs[0, 0]) == int(pad)
+
+    def test_streams_are_decorrelated(self):
+        n = 4000
+        ctxs = jnp.arange(n, dtype=jnp.uint32)
+        ud = jax.vmap(lambda c: prf.uniform_from(KEY, c,
+                                                 prf.STREAM_DRAFT))(ctxs)
+        ut = jax.vmap(lambda c: prf.uniform_from(KEY, c,
+                                                 prf.STREAM_TARGET))(ctxs)
+        corr = np.corrcoef(np.asarray(ud), np.asarray(ut))[0, 1]
+        assert abs(corr) < 0.05
+        assert abs(float(ud.mean()) - 0.5) < 0.03
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(0, 2**32 - 1))
+    def test_kernel_uniform_in_unit_interval(self, seed, counter):
+        u = float(prf.kernel_uniform(jnp.uint32(seed), jnp.uint32(counter)))
+        assert 0.0 < u < 1.0
+
+    def test_kernel_uniform_uniformity(self):
+        us = np.asarray(prf.kernel_uniform(
+            jnp.uint32(7), jnp.arange(8192, dtype=jnp.uint32)))
+        hist, _ = np.histogram(us, bins=16, range=(0, 1))
+        assert hist.min() > 8192 / 16 * 0.8
+        assert abs(us.mean() - 0.5) < 0.02
+
+
+class TestData:
+    def test_synthetic_batches_deterministic(self):
+        from repro.data import synthetic
+        corpus = synthetic.SyntheticCorpus()
+        stream = synthetic.token_stream(corpus, 20)
+        it1 = synthetic.batches(stream, batch=4, seq=16, seed=3)
+        it2 = synthetic.batches(stream, batch=4, seq=16, seed=3)
+        b1, b2 = next(it1), next(it2)
+        assert np.array_equal(b1["tokens"], b2["tokens"])
+        assert b1["tokens"].shape == (4, 17)
+        assert int(b1["tokens"].max()) < synthetic.VOCAB
+
+    def test_synthetic_has_structure(self):
+        """The corpus must be learnable: repeated bigrams abound."""
+        from repro.data import synthetic
+        corpus = synthetic.SyntheticCorpus()
+        stream = synthetic.token_stream(corpus, 50)
+        big = set()
+        rep = 0
+        for a, b in zip(stream[:-1], stream[1:]):
+            if (int(a), int(b)) in big:
+                rep += 1
+            big.add((int(a), int(b)))
+        assert rep > len(stream) // 2
+
+    def test_roundtrip_bytes(self):
+        from repro.data import synthetic
+        corpus = synthetic.SyntheticCorpus()
+        doc = corpus.documents(1)[0]
+        assert synthetic.decode_bytes(synthetic.encode(doc)) == doc
+
+
+class TestCheckpoint:
+    def test_roundtrip(self, tmp_path):
+        from repro.checkpoint import io as ckpt
+        tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+                "b": {"c": jnp.ones((4,), jnp.float32),
+                      "step": jnp.zeros((), jnp.int32) + 7}}
+        path = os.path.join(tmp_path, "test_ckpt.npz")
+        ckpt.save(path, tree)
+        back = ckpt.load(path, tree)
+        np.testing.assert_array_equal(
+            np.asarray(back["a"], np.float32),
+            np.asarray(tree["a"], np.float32))
+        assert back["a"].dtype == jnp.bfloat16
+        assert int(back["b"]["step"]) == 7
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        from repro.checkpoint import io as ckpt
+        path = os.path.join(tmp_path, "ck.npz")
+        ckpt.save(path, {"a": jnp.ones((2, 2))})
+        with pytest.raises(ValueError):
+            ckpt.load(path, {"a": jnp.ones((3,))})
+
+
+class TestHloCost:
+    def test_scan_trip_count_scaling(self):
+        from repro.launch import hlocost
+
+        def f(w, x):
+            def step(c, _):
+                return jnp.maximum(c @ w, 0.0), None
+            y, _ = jax.lax.scan(step, x, None, length=9)
+            return y.sum()
+
+        comp = jax.jit(f).lower(
+            jax.ShapeDtypeStruct((32, 32), jnp.float32),
+            jax.ShapeDtypeStruct((4, 32), jnp.float32)).compile()
+        c = hlocost.module_cost(comp.as_text())
+        assert c.flops == pytest.approx(9 * 2 * 4 * 32 * 32, rel=0.01)
+
+    def test_shape_bytes(self):
+        from repro.launch.hlocost import _type_nbytes
+        assert _type_nbytes("bf16[16,128]{1,0}") == 16 * 128 * 2
+        assert _type_nbytes("(f32[4], s32[2,2])") == 16 + 16
+        assert _type_nbytes("pred[]") == 1

@@ -1,0 +1,124 @@
+"""Speculative sampling operators and Theorem 4.1 (a)/(b)/(c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prf, speculative as spec, strength
+from repro.core.watermark import gumbel
+from repro.core.watermark.base import get_decoder
+
+KEY = jax.random.key(11)
+
+
+def _pair(seed, v, temp=1.0):
+    kq, kp = jax.random.split(jax.random.key(seed))
+    return (jax.nn.softmax(jax.random.normal(kq, (v,)) * temp),
+            jax.nn.softmax(jax.random.normal(kp, (v,)) * temp))
+
+
+def test_residual_dist():
+    Q, P = _pair(0, 12)
+    r = spec.residual_dist(P, Q)
+    assert float(jnp.abs(r.sum() - 1.0)) < 1e-6
+    assert float(jnp.min(r)) >= 0
+    # support only where P > Q
+    assert bool(jnp.all((r > 0) <= (P > Q)))
+
+
+def test_acceptance_rate_is_one_minus_tv():
+    Q, P = _pair(1, 20)
+    ar = float(spec.acceptance_rate(Q, P))
+    tv = float(strength.tv(Q, P))
+    assert ar == pytest.approx(1.0 - tv, abs=1e-6)
+
+
+def test_spec_kernel_preserves_target():
+    """A_spec(Q,P) o Q == P exactly at the distribution level (Eq. 5)."""
+    Q, P = _pair(2, 16)
+    out = spec.apply_spec_kernel(Q[None], P[None], Q[None])[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(P), atol=1e-6)
+
+
+def test_hu_composition_unbiased():
+    """E_zeta[A_spec(Q,P) o Q_zeta] = P (Hu & Huang's scheme)."""
+    Q, P = _pair(3, 12)
+    dec = gumbel.make()
+    ctxs = jnp.arange(20000, dtype=jnp.uint32)
+    qz = jax.vmap(lambda c: dec.modified_dist(Q, KEY, c,
+                                              prf.STREAM_DRAFT))(ctxs)
+    out = spec.apply_spec_kernel(qz, P[None], Q[None])
+    np.testing.assert_allclose(np.asarray(out.mean(0)), np.asarray(P),
+                               atol=0.02)
+
+
+class TestAlg1:
+    """Theorem 4.1 for the pseudorandom-acceptance output P'_zeta."""
+
+    def _outputs(self, seed, v, n=20000):
+        Q, P = _pair(seed, v)
+        dec = gumbel.make()
+        ctxs = jnp.arange(n, dtype=jnp.uint32)
+        qz = jax.vmap(lambda c: dec.modified_dist(Q, KEY, c,
+                                                  prf.STREAM_DRAFT))(ctxs)
+        rz = jax.vmap(lambda c: dec.modified_dist(
+            spec.residual_dist(P, Q), KEY, c, prf.STREAM_TARGET))(ctxs)
+        us = jax.vmap(lambda c: prf.accept_uniform(KEY, c))(ctxs)
+        outs = jax.vmap(lambda q, r, u: spec.alg1_output_dist(
+            q, P, Q, r, u))(qz, rz, us)
+        return Q, P, qz, us, outs
+
+    def test_a_unbiasedness(self):
+        _, P, _, _, outs = self._outputs(4, 10)
+        np.testing.assert_allclose(np.asarray(outs.mean(0)), np.asarray(P),
+                                   atol=0.02)
+
+    def test_b_max_sampling_efficiency(self):
+        Q, P, qz, us, _ = self._outputs(5, 10)
+        a = jnp.minimum(1.0, P / jnp.maximum(Q, 1e-30))
+        se = float(jnp.mean(jnp.sum(qz * (us[:, None] < a[None]), -1)))
+        assert se == pytest.approx(1.0 - float(strength.tv(Q, P)), abs=0.02)
+
+    def test_c_max_watermark_strength(self):
+        """P'_zeta is a.s. degenerate => WS = Ent(P)."""
+        _, P, _, _, outs = self._outputs(6, 10, n=4000)
+        assert bool(jnp.all(outs.max(-1) > 1.0 - 1e-6))
+        ws = float(jnp.mean(strength.kl(outs, P[None])))
+        assert ws == pytest.approx(float(strength.entropy(P)), rel=0.05)
+
+
+def test_verify_tokens_prefix_logic():
+    B, K = 3, 4
+    draft = jnp.arange(B * K).reshape(B, K) % 7
+    p = jnp.array([[.9, .9, .1, .9], [.9, .1, .9, .9], [.9, .9, .9, .9]])
+    q = jnp.full((B, K), 0.5)
+    u = jnp.full((B, K), 0.6)          # accept iff p/q >= .6  i.e. p = .9
+    resid = jnp.full((B, K), 99, jnp.int32)
+    bonus = jnp.full((B,), 111, jnp.int32)
+    r = spec.verify_tokens(draft, p, q, u, resid, bonus)
+    assert r.n_accepted.tolist() == [2, 1, 4]
+    assert r.out_len.tolist() == [3, 2, 5]
+    assert r.out_tokens[0, 2] == 99        # residual after first rejection
+    assert r.out_tokens[2, 4] == 111       # bonus when all accepted
+    assert bool(r.from_draft[0, :2].all()) and not bool(r.from_draft[0, 2])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 30), st.integers(0, 2**31 - 1), st.floats(0.3, 3.0))
+def test_alg1_distribution_identity_property(v, seed, temp):
+    """Property: Eq. (15) with EXACT expectation over the acceptance coin —
+    integrating u out analytically must recover the Hu composition."""
+    Q, P = _pair(seed % 991, v, temp)
+    dec = gumbel.make()
+    ctxs = jnp.arange(256, dtype=jnp.uint32)
+    qz = jax.vmap(lambda c: dec.modified_dist(Q, KEY, c,
+                                              prf.STREAM_DRAFT))(ctxs)
+    resid = spec.residual_dist(P, Q)
+    a = jnp.minimum(1.0, P / jnp.maximum(Q, 1e-30))
+    # E_u[P'_zeta] = qz * a + (1 - sum_w qz_w a_w) * resid
+    expect = qz * a[None] + (1 - (qz * a[None]).sum(-1, keepdims=True)) \
+        * resid[None]
+    ref = spec.apply_google_kernel(qz, P[None], Q[None], resid[None])
+    np.testing.assert_allclose(np.asarray(expect), np.asarray(ref),
+                               atol=1e-5)

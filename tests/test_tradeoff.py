@@ -1,0 +1,76 @@
+"""Trade-off curves (Sec. 3.2 / Fig. 1): endpoints, monotonicity, and the
+dominance relations the paper reports."""
+import numpy as np
+import pytest
+
+from repro.core import tradeoff
+from repro.core.strength import entropy, tv
+
+
+@pytest.fixture(scope="module")
+def curves():
+    kw = dict(n_gamma=9, n_seeds=4000, seed_chunk=2000)
+    return {
+        "linear": tradeoff.linear_class_curve("gumbel", n_theta=9, **kw),
+        "hu": tradeoff.composed_class_curve("gumbel", "hu", **kw),
+        "google": tradeoff.composed_class_curve("gumbel", "google", **kw),
+        "refs": tradeoff.reference_points(),
+    }
+
+
+def test_reference_points():
+    r = tradeoff.reference_points()
+    assert r["std_spec_efficiency"] == pytest.approx(
+        1.0 - float(tv(tradeoff.Q_SIM, tradeoff.P_SIM)), abs=1e-6)
+    assert r["max_strength"] == pytest.approx(
+        float(entropy(tradeoff.P_SIM)), abs=1e-6)
+
+
+def test_linear_curve_endpoints(curves):
+    c = curves["linear"]
+    refs = curves["refs"]
+    # gamma=0: unwatermarked target -> max efficiency, zero strength
+    assert c.strength[0] == pytest.approx(0.0, abs=1e-6)
+    assert c.efficiency[0] == pytest.approx(refs["std_spec_efficiency"],
+                                            abs=0.02)
+    # gamma=1 with a degenerate decoder: max strength
+    assert c.strength[-1] == pytest.approx(refs["max_strength"], rel=0.05)
+
+
+def test_linear_curve_monotone_tradeoff(curves):
+    c = curves["linear"]
+    # strength increases along gamma while efficiency decreases: Pareto
+    assert np.all(np.diff(c.strength) > -1e-3)
+    assert np.all(np.diff(c.efficiency) < 1e-3)
+
+
+def test_hu_class_keeps_efficiency_at_gamma0(curves):
+    """Hu's base point composes A_spec(Q,P) with Q_zeta: efficiency at
+    gamma=0 stays maximal while strength is already nonzero."""
+    c = curves["hu"]
+    refs = curves["refs"]
+    assert c.efficiency[0] == pytest.approx(refs["std_spec_efficiency"],
+                                            abs=0.02)
+    assert c.strength[0] > 0.5
+
+
+def test_google_dominates_hu_at_matched_efficiency(curves):
+    """Fig. 1 right: Google's class (watermarked residual) achieves
+    more strength than Hu's at equal efficiency (interior points)."""
+    hu, go = curves["hu"], curves["google"]
+    # compare at efficiencies where both curves are defined
+    for eff in np.linspace(0.25, 0.6, 6):
+        s_hu = np.interp(eff, hu.efficiency[::-1], hu.strength[::-1])
+        s_go = np.interp(eff, go.efficiency[::-1], go.strength[::-1])
+        assert s_go >= s_hu - 0.05, (eff, s_hu, s_go)
+
+
+def test_alg1_point_dominates_all_curves(curves):
+    """The paper's Alg. 1 attains (1-TV, Ent(P)) — the red star that none
+    of the classes reach simultaneously."""
+    refs = curves["refs"]
+    star = (refs["std_spec_efficiency"], refs["max_strength"])
+    for name in ("linear", "hu", "google"):
+        c = curves[name]
+        at_eff = np.interp(star[0], c.efficiency[::-1], c.strength[::-1])
+        assert at_eff <= star[1] + 1e-6

@@ -1,0 +1,124 @@
+"""Watermark decoder theory: unbiasedness, strength bounds (Thms 3.2/3.3),
+p-value decay (Thm 3.1).  Property tests drive arbitrary distributions
+through the invariants with hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prf, strength
+from repro.core.watermark import gumbel, synthid
+from repro.core.watermark.base import get_decoder
+
+KEY = jax.random.key(3)
+
+
+def _simplex(seed, v, temp=1.0):
+    return jax.nn.softmax(jax.random.normal(jax.random.key(seed), (v,))
+                          * temp)
+
+
+@pytest.mark.parametrize("name,kw", [
+    ("gumbel", {}),
+    ("synthid", {"m": 8}),
+    ("synthid", {"m": 30}),
+    ("synthid-inf", {}),
+])
+def test_unbiasedness(name, kw):
+    dec = get_decoder(name, **kw)
+    P = _simplex(0, 24)
+    err = strength.check_unbiased(dec.modified_dist, P, KEY, n_seeds=20000)
+    assert float(err) < 0.02, f"{name}{kw}: max bias {float(err)}"
+
+
+@pytest.mark.parametrize("name,kw,degenerate", [
+    ("gumbel", {}, True),
+    ("synthid-inf", {}, True),
+    ("synthid", {"m": 10}, False),
+])
+def test_strength_upper_bound(name, kw, degenerate):
+    """Thm 3.2: WS <= Ent(P) with equality iff P_zeta degenerate a.s.;
+    Thm 3.3: Gumbel-max and SynthID (m->inf) attain the bound."""
+    dec = get_decoder(name, **kw)
+    P = _simplex(1, 16)
+    ws = float(strength.strength_via_entropy(dec.modified_dist, P, KEY,
+                                             n_seeds=4000))
+    ent = float(strength.entropy(P))
+    assert ws <= ent + 1e-3
+    if degenerate:
+        assert ws == pytest.approx(ent, abs=1e-4)
+    else:
+        assert ws < ent - 0.01
+
+
+def test_strength_identity():
+    """WS = E KL(P_z||P) = Ent(P) - E Ent(P_z) for unbiased decoders
+    (two independent estimators must agree)."""
+    dec = get_decoder("synthid", m=6)
+    P = _simplex(2, 12)
+    a = float(strength.watermark_strength(dec.modified_dist, P, KEY,
+                                          n_seeds=6000))
+    b = float(strength.strength_via_entropy(dec.modified_dist, P, KEY,
+                                            n_seeds=6000))
+    assert a == pytest.approx(b, rel=0.05)
+
+
+def test_synthid_strength_increases_with_m():
+    P = _simplex(3, 16)
+    ws = [float(strength.watermark_strength(
+        get_decoder("synthid", m=m).modified_dist, P, KEY, n_seeds=1500))
+        for m in (1, 4, 16, 40)]
+    assert all(ws[i] < ws[i + 1] + 1e-3 for i in range(len(ws) - 1)), ws
+    assert ws[-1] > 0.8 * float(strength.entropy(P))
+
+
+def test_pvalue_decay_matches_strength():
+    """Thm 3.1: -(1/n) log pval -> WS for the Gumbel-max watermark."""
+    P = _simplex(4, 10)
+    dec = gumbel.make()
+    rate = float(strength.llr_pvalue_decay(dec.modified_dist, P, KEY,
+                                           n_tokens=4000))
+    ws = float(strength.watermark_strength(dec.modified_dist, P, KEY,
+                                           n_seeds=4000))
+    assert rate == pytest.approx(ws, rel=0.1)
+
+
+def test_tournament_layer_is_unbiased_and_valid():
+    """E_g[T_g(P)] = P and T_g(P) stays a distribution (Eq. 4)."""
+    P = _simplex(5, 8)
+    ctxs = jnp.arange(4000, dtype=jnp.uint32)
+
+    def one(ch):
+        g = prf.synthid_gbits(KEY, ch, prf.STREAM_DRAFT, 1, 8)[0]
+        return synthid.tournament_layer(P, g)
+
+    outs = jax.vmap(one)(ctxs)
+    np.testing.assert_allclose(outs.sum(-1), 1.0, atol=1e-5)
+    assert float(jnp.min(outs)) >= -1e-7
+    np.testing.assert_allclose(outs.mean(0), P, atol=0.02)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 2**31 - 1),
+       st.floats(0.25, 4.0))
+def test_gumbel_unbiased_property(v, seed, temp):
+    """Property: for ANY distribution, the Gumbel-max race token follows it
+    in distribution over zeta (exactness of the Gumbel-max trick)."""
+    P = _simplex(seed % 1000, v, temp)
+    dec = gumbel.make()
+    err = strength.check_unbiased(dec.modified_dist, P, KEY, n_seeds=4000)
+    assert float(err) < 6.0 / np.sqrt(4000) + 0.01
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 24), st.integers(0, 2**31 - 1), st.integers(1, 12))
+def test_synthid_dist_valid_property(v, seed, m):
+    """Property: the m-round tournament output is always a distribution."""
+    P = _simplex(seed % 997, v)
+    dec = get_decoder("synthid", m=m)
+    ctxs = jnp.arange(64, dtype=jnp.uint32)
+    pz = jax.vmap(lambda ch: dec.modified_dist(P, KEY, ch,
+                                               prf.STREAM_DRAFT))(ctxs)
+    np.testing.assert_allclose(np.asarray(pz.sum(-1)), 1.0, atol=1e-4)
+    assert float(jnp.min(pz)) >= -1e-6
