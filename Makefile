@@ -1,0 +1,18 @@
+# CI entry points.  `make ci` = tier-1 tests + quick perf smoke; the perf
+# artifacts (artifacts/kernels_bench.json, artifacts/spec_step_bench.json)
+# are produced on every run so PRs carry before/after numbers.
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+export PYTHONPATH
+
+.PHONY: test bench-quick bench ci
+
+test:
+	python -m pytest -x -q
+
+bench-quick:
+	python -m benchmarks.run --quick
+
+bench:
+	python -m benchmarks.run --fast
+
+ci: test bench-quick

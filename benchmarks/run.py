@@ -15,11 +15,18 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
-                    help="comma list: fig1,tab1,fig2,kernels,roofline")
+                    help="comma list: fig1,tab1,fig2,kernels,spec_step,"
+                         "roofline")
     ap.add_argument("--fast", action="store_true",
                     help="reduced sample counts (CI mode)")
+    ap.add_argument("--quick", action="store_true",
+                    help="perf smoke: only the kernel + spec_step benches "
+                         "at reduced sizes (produces kernels_bench.json "
+                         "and spec_step_bench.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    if args.quick:
+        only = {"kernels", "spec_step"}
 
     def want(name):
         return only is None or name in only
@@ -52,6 +59,9 @@ def main() -> None:
     if want("kernels"):
         from benchmarks import kernels_bench
         section("kernels", kernels_bench.run)
+    if want("spec_step"):
+        from benchmarks import spec_step_bench
+        section("spec_step", lambda: spec_step_bench.run(quick=args.quick))
     if want("roofline"):
         from benchmarks import roofline
         section("roofline", lambda: roofline.run(mesh_filter=""))

@@ -1,0 +1,148 @@
+"""End-to-end serving throughput: fused engine vs the seed host-loop path.
+
+Two implementations of the same Alg. 1 generation, same PRF streams, same
+emitted tokens:
+
+  * ``seed``  — the pre-fusion path: jnp step tail that materializes the
+    (B, K, V) residual distributions and samples a residual token at every
+    slot, driven by a host loop that syncs five arrays and runs a
+    per-sequence Python commit loop on every step;
+  * ``fused`` — the ``spec_verify_wm``-fused tail (one (V,) race per row)
+    inside the device-resident ``generate`` (one host sync total).
+
+Rows report tokens/s, ms/step and a token-identity check across (B, K, V)
+sweeps and both accept modes.  CPU measurement mode: model + tail run under
+XLA; on TPU the tail stages the Mosaic kernel instead of its bit-exact
+mirror (see kernels/ops.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serve import engine as E
+
+ART = common.ART
+
+
+def _pair(V):
+    tcfg = get_smoke_config("yi-6b", vocab=V, n_layers=2, d_model=128,
+                            d_ff=256, n_heads=4, n_kv_heads=2, head_dim=32)
+    dcfg = get_smoke_config("yi-6b", vocab=V, n_layers=1, d_model=64,
+                            d_ff=128, n_heads=2, n_kv_heads=2, head_dim=32)
+    return (tcfg, dcfg, M.init_params(jax.random.key(0), tcfg),
+            M.init_params(jax.random.key(1), dcfg))
+
+
+def seed_generate(t_params, d_params, tcfg, dcfg, scfg, prompts, *,
+                  n_tokens, key, state):
+    """The seed repo's generation loop, verbatim: jnp tail (fused="off"),
+    five host syncs and a per-sequence Python loop per step.  ``state`` is
+    the (shared, functionally-consumed) prefill state."""
+    B, S0 = prompts.shape
+    max_steps = n_tokens
+    step = E.jitted_spec_step(tcfg, dcfg, scfg)
+    K1 = scfg.K + 1
+    toks = np.zeros((B, n_tokens + K1 + 1), np.int32)
+    toks[:, 0] = np.asarray(state["last"])
+    lens = np.ones((B,), np.int32)
+    total_emitted = 0
+    n_steps = 0
+    for _ in range(max_steps):
+        if lens.min() >= n_tokens:
+            break
+        state, outp = step(t_params, d_params, state, key)
+        o_t = np.asarray(outp.out_tokens)
+        o_l = np.asarray(outp.out_len)
+        # the seed loop also synced these three per step
+        _ = np.asarray(outp.from_draft)
+        _ = np.asarray(outp.u)
+        _ = np.asarray(outp.ctx_hashes)
+        for b in range(B):
+            n = min(int(o_l[b]), toks.shape[1] - int(lens[b]))
+            if n <= 0:
+                continue
+            toks[b, lens[b]:lens[b] + n] = o_t[b, :n]
+            lens[b] += n
+        total_emitted += int(o_l.sum())
+        n_steps += 1
+    return toks, lens, total_emitted, n_steps
+
+
+def run(quick: bool = False, verbose: bool = True):
+    sweeps = [(8, 4, 32000)] if quick else [(8, 4, 32000), (4, 4, 4096),
+                                            (8, 8, 4096)]
+    accepts = ["pseudorandom"] if quick else ["pseudorandom", "standard"]
+    n_tokens = 16 if quick else 32
+    key = jax.random.key(7)
+    rows = []
+    for B, K, V in sweeps:
+        tcfg, dcfg, tp, dp = _pair(V)
+        prompts = jax.random.randint(jax.random.key(2), (B, 8), 1, V)
+        for accept in accepts:
+            scfg = E.SpecConfig(K=K, watermark="gumbel", accept=accept)
+            scfg_seed = dataclasses.replace(scfg, fused="off")
+            # one shared prefill; both paths decode from it (the decode
+            # phase is what this PR optimizes; prefill is a common prefix)
+            max_seq = prompts.shape[1] + 1 + (K + 1) * n_tokens + 2
+            state = E.init_state(tp, dp, tcfg, dcfg, scfg, prompts,
+                                 max_seq, key)
+            jax.block_until_ready(state["last"])
+
+            # warmup (compile) both paths, then time
+            res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts,
+                             n_tokens=n_tokens, key=key, state=state)
+            t0 = time.perf_counter()
+            res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts,
+                             n_tokens=n_tokens, key=key, state=state)
+            dt_new = time.perf_counter() - t0
+            emitted_new = int(res.lengths.sum())
+
+            seed_generate(tp, dp, tcfg, dcfg, scfg_seed, prompts,
+                          n_tokens=n_tokens, key=key, state=state)
+            t0 = time.perf_counter()
+            s_toks, s_lens, s_emitted, s_steps = seed_generate(
+                tp, dp, tcfg, dcfg, scfg_seed, prompts,
+                n_tokens=n_tokens, key=key, state=state)
+            dt_old = time.perf_counter() - t0
+
+            identical = (bool(np.array_equal(res.lengths, s_lens))
+                         and all(np.array_equal(
+                             res.tokens[b, :s_lens[b]],
+                             s_toks[b, :s_lens[b]])
+                             for b in range(B)))
+            tps_new = emitted_new / dt_new
+            tps_old = s_emitted / dt_old
+            rows.append({
+                "B": B, "K": K, "V": V, "accept": accept,
+                "tok_per_s_fused": round(tps_new, 1),
+                "tok_per_s_seed": round(tps_old, 1),
+                "speedup": round(tps_new / tps_old, 2),
+                "ms_per_step_fused": round(dt_new / res.n_steps * 1e3, 2),
+                "ms_per_step_seed": round(dt_old / s_steps * 1e3, 2),
+                "identical_tokens": identical,
+            })
+            if verbose:
+                r = rows[-1]
+                print(f"spec_step,B={B},K={K},V={V},accept={accept},"
+                      f"fused={r['tok_per_s_fused']}tok/s,"
+                      f"seed={r['tok_per_s_seed']}tok/s,"
+                      f"x{r['speedup']},exact={identical}", flush=True)
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, "spec_step_bench.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    run(quick="--quick" in sys.argv)

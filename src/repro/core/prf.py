@@ -83,11 +83,24 @@ def uniform_from(key: jax.Array, ctx_hash, stream: int, shape=()):
     return jax.random.uniform(stream_key(key, ctx_hash, stream), shape)
 
 
+def wm_seed(key, ctx_hash, stream: int) -> jnp.ndarray:
+    """uint32 seed for the integer counter PRF, derived from the threefry
+    stream key.  The (key, context, stream) -> seed map stays threefry (so
+    streams are cryptographically decorrelated) while the per-token uniform
+    expansion uses ``kernel_uniform`` — bit-exact with the Pallas kernels,
+    which receive these seeds as scalars and expand them in VMEM."""
+    return jax.random.bits(stream_key(key, ctx_hash, stream),
+                           dtype=jnp.uint32)
+
+
 def gumbel_uniforms(key, ctx_hash, stream: int, vocab: int):
-    """The (U_w)_{w in vocab} vector of the Gumbel-max watermark."""
-    u = jax.random.uniform(stream_key(key, ctx_hash, stream), (vocab,),
-                           minval=jnp.float32(1e-12), maxval=1.0)
-    return u
+    """The (U_w)_{w in vocab} vector of the Gumbel-max watermark.
+
+    Expanded with the integer counter PRF from a threefry-derived seed, so
+    the same uniforms are reproducible inside the fused Pallas kernels (and
+    at detection time) from the scalar ``wm_seed``."""
+    w = jnp.arange(vocab, dtype=jnp.uint32)
+    return kernel_uniform(wm_seed(key, ctx_hash, stream), w)
 
 
 def synthid_gbits(key, ctx_hash, stream: int, m: int, vocab: int):

@@ -12,7 +12,8 @@ from functools import partial
 import jax
 
 from repro.kernels.gumbel_argmax import gumbel_argmax_kernel
-from repro.kernels.spec_verify import spec_verify_kernel
+from repro.kernels.spec_verify import (spec_verify_kernel,
+                                       spec_verify_wm_kernel)
 from repro.kernels.tournament import tournament_kernel
 
 
@@ -42,3 +43,21 @@ def spec_verify(p, q, draft_tokens, u, resid_seeds, *,
     interpret = _interpret_default() if interpret is None else interpret
     return spec_verify_kernel(p, q, draft_tokens, u, resid_seeds,
                               interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, *,
+                   interpret: bool | None = None):
+    """Fused watermarked verification tail.  On TPU this stages the Mosaic
+    kernel; on CPU the default is the *bit-exact jnp mirror* of the kernel
+    program (``ref.spec_verify_wm_ref`` — parity enforced by tests), because
+    the Pallas interpreter walks the (B,) grid serially and is ~8x slower
+    than the XLA-compiled mirror.  Pass ``interpret=True`` to force the
+    interpreter (kernel validation)."""
+    if interpret is None and _interpret_default():
+        from repro.kernels import ref as _ref
+        return _ref.spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds,
+                                       plain_seeds, seen)
+    interpret = False if interpret is None else interpret
+    return spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds,
+                                 plain_seeds, seen, interpret=interpret)

@@ -70,3 +70,38 @@ def spec_verify_ref(p, q, draft_tokens, u, resid_seeds):
 
     rtok, ru = jax.vmap(race)(r, seed_s)
     return n_acc, prefix, rtok, ru
+
+
+def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen):
+    """Mirror of spec_verify_wm_kernel (full watermarked Alg. 1 tail);
+    see its docstring.  p: (B, K+1, V), q: (B, K, V)."""
+    B, K1, V = p.shape
+    K = K1 - 1
+    p = p.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    p_tok = jnp.take_along_axis(
+        p[:, :K], draft_tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    q_tok = jnp.take_along_axis(
+        q, draft_tokens[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    a = jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-30))
+    prefix = jnp.cumprod((u < a).astype(jnp.int32), axis=-1)
+    n_acc = prefix.sum(axis=-1).astype(jnp.int32)
+    slot = n_acc                                        # in [0, K]
+    p_s = jnp.take_along_axis(p, slot[:, None, None], axis=1)[:, 0]
+    q_ext = jnp.concatenate([q, jnp.zeros((B, 1, V), q.dtype)], axis=1)
+    q_s = jnp.take_along_axis(q_ext, slot[:, None, None], axis=1)[:, 0]
+    eff = jnp.where(seen != 0, plain_seeds.astype(jnp.uint32),
+                    wm_seeds.astype(jnp.uint32))
+    seed_s = jnp.take_along_axis(eff, slot[:, None], axis=1)[:, 0]
+    r = jnp.maximum(p_s - q_s, 0.0)                     # bonus dist at slot K
+    w = jnp.arange(V, dtype=jnp.uint32)
+
+    def race(r_row, s):
+        uv = prf.kernel_uniform(s, w)
+        score = jnp.log(uv) / jnp.maximum(r_row, 1e-30)
+        score = jnp.where(r_row > 0, score, -jnp.inf)
+        tok = jnp.argmax(score).astype(jnp.int32)
+        return tok, uv[tok]
+
+    etok, eu = jax.vmap(race)(r, seed_s)
+    return n_acc, prefix, etok, eu

@@ -14,6 +14,15 @@ tokens and the pseudorandom acceptance coins u = G(zeta^R):
 
 Everything after the two model calls of a speculative step fuses into one
 VMEM-resident pass over the (K, V) probability block.
+
+``spec_verify_wm`` extends this into the full watermarked tail of Alg. 1:
+per sequence row it additionally samples the *emitted* extra token — the
+watermarked residual  argmax_w log(U_w)/(p_w − q_w)_+  at the first
+rejected slot, or the watermarked bonus  argmax_w log(U_w)/p_w  when all
+K drafts are accepted — selecting the PRF stream in-kernel: repeated
+contexts (Hu et al.'s ``seen`` mask) race with the non-watermark stream
+seed instead of the ζ^T one.  Exactly one (V,)-sized race runs per row,
+replacing the engine's former O(K·V)-per-row residual materialization.
 """
 from __future__ import annotations
 
@@ -100,3 +109,100 @@ def spec_verify_kernel(p, q, draft_tokens, u, resid_seeds, *,
     )(pp, qp, draft_tokens, u, resid_seeds.astype(jnp.uint32))
     n_acc, acc, rtok, ru = outs
     return n_acc[:, 0], acc, rtok[:, 0], ru[:, 0]
+
+
+def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, seen_ref,
+               nacc_ref, acc_ref, etok_ref, eu_ref, *, K: int, vocab: int):
+    p = p_ref[0].astype(jnp.float32)        # (K+1, Vp): slot K = bonus dist
+    q = q_ref[0].astype(jnp.float32)        # (K, Vp)
+    toks = tok_ref[0]                       # (K,)
+    u = u_ref[0].astype(jnp.float32)        # (K,) acceptance coins
+    wms = wms_ref[0].astype(jnp.uint32)     # (K+1,) zeta^T stream seeds
+    pls = pls_ref[0].astype(jnp.uint32)     # (K+1,) non-watermark seeds
+    seen = seen_ref[0]                      # (K+1,) int32 repeated-ctx mask
+    kv, vp = q.shape
+    w2 = jax.lax.broadcasted_iota(jnp.int32, (kv, vp), 1)
+    onehot = (w2 == toks[:, None]).astype(jnp.float32)
+    p_tok = jnp.sum(p[:K] * onehot, axis=-1)  # (K,)
+    q_tok = jnp.sum(q * onehot, axis=-1)
+    a = jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-30))
+    prefix = jnp.cumprod((u < a).astype(jnp.int32))
+    n_acc = jnp.sum(prefix)
+    acc_ref[0] = prefix
+    nacc_ref[0] = n_acc.astype(jnp.int32)[None]
+
+    # the single emitted extra token: slot n_acc in [0, K].  For n_acc < K
+    # the race runs over (p − q)_+ (first-rejection residual); for n_acc == K
+    # the q mask selects nothing, so r == p_K (bonus).  The Gumbel-max race
+    # is scale-invariant, so the residual needs no normalization pass.
+    slot = n_acc
+    rows_p = jax.lax.broadcasted_iota(jnp.int32, (K + 1, 1), 0)
+    p_s = jnp.sum(p * (rows_p == slot).astype(jnp.float32),
+                  axis=0, keepdims=True)           # (1, Vp)
+    rows_q = jax.lax.broadcasted_iota(jnp.int32, (kv, 1), 0)
+    q_s = jnp.sum(q * (rows_q == slot).astype(jnp.float32),
+                  axis=0, keepdims=True)
+    eff = jnp.where(seen != 0, pls, wms)           # (K+1,) stream switch
+    seed_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, eff, jnp.uint32(0)))
+    r = jnp.maximum(p_s - q_s, 0.0)
+    wv = jax.lax.broadcasted_iota(jnp.uint32, (1, vp), 1)
+    uv = _uniform(seed_s, wv)
+    score = jnp.log(uv) / jnp.maximum(r, 1e-30)
+    score = jnp.where((r > 0) & (wv < vocab), score, -jnp.inf)
+    etok = jnp.argmax(score).astype(jnp.int32)     # flat over (1, Vp)
+    etok_ref[0] = etok[None]
+    eu_ref[0] = jnp.sum(uv * (wv == etok.astype(jnp.uint32))
+                        .astype(jnp.float32))[None]
+
+
+def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
+                          seen, *, interpret: bool = False):
+    """Fused watermarked verification tail of Alg. 1 (accept/reject +
+    residual-or-bonus sampling) — one VMEM pass per sequence row.
+
+    p: (B, K+1, V) target probs for the K verified slots plus the bonus
+    slot; q: (B, K, V) draft probs; draft_tokens: (B, K) int32; u: (B, K)
+    acceptance coins; wm_seeds/plain_seeds: (B, K+1) uint32 per-slot
+    counter-PRF seeds for the ζ^T and non-watermark streams; seen: (B, K+1)
+    repeated-context mask (nonzero -> fall back to the plain stream).
+
+    Returns (n_acc (B,), accepted (B, K) int32, extra_tok (B,),
+    extra_u (B,)) where extra_tok is the emitted slot-n_acc token (residual
+    on first rejection, bonus when all accepted) and extra_u its PRF
+    uniform (the Gumbel detection statistic)."""
+    B, K1, V = p.shape
+    K = K1 - 1
+    assert q.shape == (B, K, V), (p.shape, q.shape)
+    vp = -(-V // 128) * 128
+    pp = jnp.zeros((B, K1, vp), p.dtype).at[:, :, :V].set(p)
+    qp = jnp.zeros((B, K, vp), q.dtype).at[:, :, :V].set(q)
+    outs = pl.pallas_call(
+        functools.partial(_wm_kernel, K=K, vocab=V),
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1, K1, vp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, K, vp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, K1), lambda i: (i, 0)),
+            pl.BlockSpec((1, K1), lambda i: (i, 0)),
+            pl.BlockSpec((1, K1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, K), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pp, qp, draft_tokens.astype(jnp.int32), u.astype(jnp.float32),
+      wm_seeds.astype(jnp.uint32), plain_seeds.astype(jnp.uint32),
+      seen.astype(jnp.int32))
+    n_acc, acc, etok, eu = outs
+    return n_acc[:, 0], acc, etok[:, 0], eu[:, 0]

@@ -292,6 +292,8 @@ def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
             compiled = lowered.compile()
             rec["compile_s"] = round(time.time() - t1, 1)
             ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):  # older jax: one dict per dev
+                ca = ca[0] if ca else {}
             # raw XLA numbers (while bodies counted once — see hlocost)
             rec["xla_flops_unscaled"] = float(ca.get("flops", -1))
             ma = compiled.memory_analysis()

@@ -8,15 +8,20 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    # AxisType landed after jax 0.4.x — pass it only where it exists.
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips with a "pod" axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(*, data: int = 1, model: int = 1):
@@ -24,5 +29,4 @@ def make_host_mesh(*, data: int = 1, model: int = 1):
     n = len(jax.devices())
     data = min(data, n)
     model = max(1, min(model, n // data))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=_auto(2))
+    return _make_mesh((data, model), ("data", "model"))

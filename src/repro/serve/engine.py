@@ -11,9 +11,17 @@ function over fixed shapes:
   3. accept/reject with **pseudorandom acceptance coins** u = G(ζ^R)
      (Alg. 1 line 8) — or fresh uniforms in ``standard`` mode;
   4. first-rejection residual sampling from the watermarked
-     ``(P−Q)_{+,ζ^T}``, bonus token from ``P_{ζ^T}`` when all accepted;
+     ``(P−Q)_{+,ζ^T}``, bonus token from ``P_{ζ^T}`` when all accepted —
+     steps 3–4 run fused in the ``spec_verify_wm`` Pallas kernel (one VMEM
+     pass per row, a single (V,) Gumbel race for the emitted extra token)
+     for gumbel/none watermarks, and on a jnp fallback for synthid;
   5. per-sequence commit: cache positions advance by ``out_len``;
      recurrent states roll back by checkpoint selection.
+
+``generate`` is device-resident: the multi-step loop, including the
+scatter-commit of every step's outputs into preallocated buffers, runs as
+one jitted ``while_loop`` with a single host sync per generation (or per
+``sync_every`` steps for streaming).
 
 Divergent acceptance is handled with per-sequence cache positions (B,)
 throughout — no host-side re-batching.
@@ -38,6 +46,7 @@ from repro.configs.base import ModelConfig
 from repro.core import prf, speculative as spec
 from repro.core import watermark as _wm  # noqa: F401  (register decoders)
 from repro.core.watermark.base import Decoder, get_decoder
+from repro.kernels import ops as KOPS
 from repro.models import model as M
 
 EPS = 1e-30
@@ -53,18 +62,45 @@ class SpecConfig:
     accept: str = "pseudorandom"  # pseudorandom (Alg. 1) | standard
     mask_repeated: bool = True
     history_cap: int = 1024      # repeated-context history buffer size
+    fused: str = "auto"          # auto | on | off — Pallas-fused step tail
+
+
+def use_fused(scfg: SpecConfig) -> bool:
+    """The fused Pallas tail implements the Gumbel-max race (gumbel / none);
+    synthid's tournament tail stays on the jnp path."""
+    if scfg.fused == "off":
+        return False
+    fusable = scfg.watermark in ("gumbel", "none")
+    if scfg.fused == "on":
+        if not fusable:
+            raise ValueError(
+                f"fused='on' unsupported for watermark={scfg.watermark!r}: "
+                "the fused tail races Gumbel-max, which would silently "
+                "replace the tournament watermark")
+        return True
+    return fusable
+
+
+def _race_sample(probs, seed):
+    """Categorical sample as a Gumbel-max race with counter-PRF uniforms —
+    bit-compatible with the in-kernel race (same seed -> same token)."""
+    w = jnp.arange(probs.shape[-1], dtype=jnp.uint32)
+    uv = prf.kernel_uniform(seed, w)
+    score = jnp.log(uv) / jnp.maximum(probs, EPS)
+    score = jnp.where(probs > 0, score, -jnp.inf)
+    return jnp.argmax(score).astype(jnp.int32)
 
 
 def _plain_decoder() -> Decoder:
-    """No watermark: categorical sampling with non-recoverable randomness."""
+    """No watermark: categorical sampling with non-recoverable randomness
+    (a Gumbel-max race on the plain stream, so the fused kernel tail can
+    reproduce it from the scalar seed)."""
     def dist(probs, key, ctx_hash, stream=0):
         return probs
 
     def sample(probs, key, ctx_hash, stream=0):
-        u = prf.uniform_from(key, ctx_hash, prf.STREAM_PLAIN + stream + 13)
-        cdf = jnp.cumsum(probs / jnp.maximum(probs.sum(), EPS))
-        tok = jnp.minimum(jnp.searchsorted(cdf, u), probs.shape[-1] - 1)
-        return tok, jnp.zeros(())
+        seed = prf.wm_seed(key, ctx_hash, prf.STREAM_PLAIN + stream + 13)
+        return _race_sample(probs, seed), jnp.zeros(())
 
     def recover(tokens, key, ctx_hashes, stream, vocab):
         return jnp.zeros(tokens.shape, jnp.float32)
@@ -178,14 +214,12 @@ def _seen_in_history(hist, hist_n, ctx_h):
 
 def _wm_sample_batch(dec, probs, key, ctx_h, stream, seen, fallback_stream):
     """Watermarked sample per sequence; repeated contexts fall back to raw
-    categorical sampling with a non-watermark stream."""
+    categorical sampling (counter-PRF race) with a non-watermark stream."""
     tok_wm, _ = jax.vmap(
         lambda pr, ch: dec.sample(pr, key, ch, stream))(probs, ctx_h)
 
     def raw(pr, ch):
-        u = prf.uniform_from(key, ch, fallback_stream)
-        cdf = jnp.cumsum(pr / jnp.maximum(pr.sum(), EPS))
-        return jnp.minimum(jnp.searchsorted(cdf, u), pr.shape[-1] - 1)
+        return _race_sample(pr, prf.wm_seed(key, ch, fallback_stream))
 
     tok_raw = jax.vmap(raw)(probs, ctx_h)
     return jnp.where(seen, tok_raw, tok_wm).astype(jnp.int32)
@@ -240,6 +274,23 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
     dec = make_decoder(scfg)
     K, c = scfg.K, scfg.ctx_window
     temp = scfg.temperature
+    fused = use_fused(scfg)
+    # "none" samples the tail on the plain stream the plain decoder uses;
+    # gumbel samples on ζ^T — either way one scalar seed per slot.
+    tail_wm_stream = (prf.STREAM_PLAIN + prf.STREAM_TARGET + 13
+                      if scfg.watermark == "none" else prf.STREAM_TARGET)
+    draft_wm_stream = (prf.STREAM_PLAIN + prf.STREAM_DRAFT + 13
+                       if scfg.watermark == "none" else prf.STREAM_DRAFT)
+
+    def _draft_sample_fused(q_full, ctx_h, seen, key):
+        """Both the watermarked draw and the seen-fallback are Gumbel races
+        over the same q — selecting the seed first halves the race count
+        while staying bit-identical to the two-branch decoder path."""
+        wm = jax.vmap(lambda ch: prf.wm_seed(key, ch, draft_wm_stream))(
+            ctx_h)
+        pl = jax.vmap(lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 1))(
+            ctx_h)
+        return jax.vmap(_race_sample)(q_full, jnp.where(seen, pl, wm))
 
     def step(t_params, d_params, state, key):
         t_cache, d_cache = state["t_cache"], state["d_cache"]
@@ -259,9 +310,12 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
             ctx_h = prf.context_hash(window)
             seen = (_seen_in_history(hist, hist_n, ctx_h)
                     if scfg.mask_repeated else jnp.zeros((B,), bool))
-            tok = _wm_sample_batch(dec, q_full, key, ctx_h,
-                                   prf.STREAM_DRAFT, seen,
-                                   prf.STREAM_PLAIN + 1)
+            if fused:
+                tok = _draft_sample_fused(q_full, ctx_h, seen, key)
+            else:
+                tok = _wm_sample_batch(dec, q_full, key, ctx_h,
+                                       prf.STREAM_DRAFT, seen,
+                                       prf.STREAM_PLAIN + 1)
             window = jnp.concatenate([window[:, 1:], tok[:, None]], axis=1)
             chk = ({k: d_cache[k] for k in RECURRENT_KEYS if k in d_cache}
                    if d_recurrent else 0)
@@ -292,40 +346,60 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
             u = jax.random.uniform(
                 jax.random.fold_in(key, state["step_idx"]), (B, K))
 
-        p_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
-            p_fulls[:, :K], draft_toks)                   # (B, K)
-        q_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
-            q_fulls, draft_toks)                          # (B, K)
-        a = jnp.minimum(1.0, p_of_draft / jnp.maximum(q_of_draft, EPS))
-        ok = u < a
-        prefix = jnp.cumprod(ok.astype(jnp.int32), axis=-1).astype(bool)
-        n_acc = prefix.sum(axis=-1).astype(jnp.int32)     # (B,)
-        all_ok = n_acc == K
+        all_hashes = jnp.concatenate([ctx_hs, ctx_bonus[:, None]], axis=1)
+        all_seen = jnp.concatenate([seens, seen_bonus[:, None]], axis=1)
 
-        # ---- 4. residual / bonus sampling (watermarked, ζ^T) ----------------
-        resid = spec.residual_dist(p_fulls[:, :K], q_fulls)       # (B, K, V)
-        resid_toks = jax.vmap(
-            lambda pr, ch, sn: _wm_sample_batch(
-                dec, pr, key, ch, prf.STREAM_TARGET, sn,
-                prf.STREAM_PLAIN + 2),
-            in_axes=(1, 1, 1), out_axes=1)(resid, ctx_hs, seens)  # (B, K)
-        bonus_tok = _wm_sample_batch(dec, p_fulls[:, K], key, ctx_bonus,
-                                     prf.STREAM_TARGET, seen_bonus,
-                                     prf.STREAM_PLAIN + 3)        # (B,)
+        if fused:
+            # ---- 4. fused verify + residual/bonus (Pallas) -----------------
+            # Per-slot scalar seeds for the ζ^T and non-watermark streams;
+            # the kernel gathers p/q of the drafts, computes the prefix
+            # acceptance and races the single emitted extra token in VMEM,
+            # switching to the plain-stream seed on ``seen`` contexts.
+            wm_seeds = jax.vmap(jax.vmap(
+                lambda ch: prf.wm_seed(key, ch, tail_wm_stream)))(all_hashes)
+            pl_r = jax.vmap(jax.vmap(
+                lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 2)))(
+                ctx_hs)
+            pl_b = jax.vmap(
+                lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 3))(
+                ctx_bonus)
+            plain_seeds = jnp.concatenate([pl_r, pl_b[:, None]], axis=1)
+            n_acc, prefix_i, extra, _ = KOPS.spec_verify_wm(
+                p_fulls, q_fulls, draft_toks, u, wm_seeds, plain_seeds,
+                all_seen)
+            prefix = prefix_i.astype(bool)
+        else:
+            # ---- 4. jnp tail (synthid tournament / reference path) ---------
+            p_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
+                p_fulls[:, :K], draft_toks)               # (B, K)
+            q_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
+                q_fulls, draft_toks)                      # (B, K)
+            a = jnp.minimum(1.0, p_of_draft / jnp.maximum(q_of_draft, EPS))
+            ok = u < a
+            prefix = jnp.cumprod(ok.astype(jnp.int32), axis=-1).astype(bool)
+            n_acc = prefix.sum(axis=-1).astype(jnp.int32)  # (B,)
+            all_ok = n_acc == K
+            resid = spec.residual_dist(p_fulls[:, :K], q_fulls)   # (B, K, V)
+            resid_toks = jax.vmap(
+                lambda pr, ch, sn: _wm_sample_batch(
+                    dec, pr, key, ch, prf.STREAM_TARGET, sn,
+                    prf.STREAM_PLAIN + 2),
+                in_axes=(1, 1, 1), out_axes=1)(resid, ctx_hs, seens)
+            bonus_tok = _wm_sample_batch(dec, p_fulls[:, K], key, ctx_bonus,
+                                         prf.STREAM_TARGET, seen_bonus,
+                                         prf.STREAM_PLAIN + 3)    # (B,)
+            extra = jnp.where(
+                all_ok, bonus_tok,
+                jnp.take_along_axis(resid_toks,
+                                    jnp.minimum(n_acc, K - 1)[:, None],
+                                    axis=1)[:, 0])
 
         # ---- 5. assemble outputs -------------------------------------------
         out = jnp.zeros((B, K + 1), jnp.int32)
         out = out.at[:, :K].set(jnp.where(prefix, draft_toks, 0))
-        extra = jnp.where(
-            all_ok, bonus_tok,
-            jnp.take_along_axis(resid_toks,
-                                jnp.minimum(n_acc, K - 1)[:, None],
-                                axis=1)[:, 0])
         out = jax.vmap(lambda o, n, e: o.at[n].set(e))(out, n_acc, extra)
         out_len = n_acc + 1
         from_draft = jnp.arange(K + 1)[None, :] < n_acc[:, None]
-        all_hashes = jnp.concatenate([ctx_hs, ctx_bonus[:, None]], axis=1)
-        all_seen = jnp.concatenate([seens, seen_bonus[:, None]], axis=1)
 
         # ---- 6. commit -------------------------------------------------------
         t_cache = _rollback(t_cache, t_chks, t_pos0, out_len)
@@ -348,22 +422,21 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
         new_window = jnp.take_along_axis(full, idx, axis=1)
         new_last = jnp.take_along_axis(out, (out_len - 1)[:, None],
                                        axis=1)[:, 0]
-        # history append for emitted, previously-unseen contexts
+        # history append for emitted, previously-unseen contexts — a masked
+        # scatter: slot s lands at (hist_n + #adds-before-s) mod H; skipped
+        # slots are routed to a trash column that is sliced off.
         if scfg.mask_repeated:
             emitted = jnp.arange(K + 1)[None, :] < out_len[:, None]
             add = emitted & ~all_seen                     # (B, K+1)
-
-            def upd(h, n, hs, ad):
-                def one(carry, sa):
-                    h, n = carry
-                    hh, a_ = sa
-                    h = jax.lax.select(
-                        a_, h.at[n % h.shape[0]].set(hh), h)
-                    return (h, n + a_.astype(jnp.int32)), None
-                (h, n), _ = jax.lax.scan(one, (h, n), (hs, ad))
-                return h, n
-
-            hist, hist_n = jax.vmap(upd)(hist, hist_n, all_hashes, add)
+            H = hist.shape[1]
+            off = jnp.cumsum(add.astype(jnp.int32), axis=1) - add
+            pos = jnp.where(add, (hist_n[:, None] + off) % H, H)
+            rows = jnp.arange(B)[:, None]
+            padded = jnp.concatenate(
+                [hist, jnp.zeros((B, 1), hist.dtype)], axis=1)
+            hist = padded.at[rows, pos].set(
+                jnp.where(add, all_hashes, 0))[:, :H]
+            hist_n = hist_n + add.sum(axis=1).astype(jnp.int32)
 
         new_state = dict(state, t_cache=t_cache, d_cache=d_cache,
                          window=new_window, last=new_last,
@@ -405,65 +478,123 @@ class GenerationResult:
     n_steps: int
 
 
+@functools.lru_cache(maxsize=64)
+def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig,
+                     scfg: SpecConfig) -> Callable:
+    """Device-resident multi-step loop: while any sequence is short (and the
+    step budget remains), run spec_step and scatter-commit its outputs into
+    the preallocated output buffers — no host sync, no per-sequence loop.
+
+    Each buffer has one trailing trash column; a slot's write position is
+    ``lens[b] + s`` when it is a valid emission that still fits, else the
+    trash column (sliced off by the caller)."""
+    step = make_spec_step(tcfg, dcfg, scfg)
+    K1 = scfg.K + 1
+
+    def loop(t_params, d_params, carry, key, n_tokens, step_limit):
+        cap = carry["toks"].shape[1] - 1   # last column is trash
+
+        def cond(c):
+            return ((c["lens"].min() < n_tokens)
+                    & (c["n_steps"] < step_limit))
+
+        def body(c):
+            state, outp = step(t_params, d_params, c["state"], key)
+            B = c["lens"].shape[0]
+            idx = jnp.arange(K1)[None, :]
+            pos = c["lens"][:, None] + idx
+            valid = (idx < outp.out_len[:, None]) & (pos < cap)
+            pos = jnp.where(valid, pos, cap)
+            rows = jnp.arange(B)[:, None]
+            o_u = jnp.concatenate(
+                [outp.u, jnp.zeros((B, 1), jnp.float32)], axis=1)
+
+            def commit(buf, vals, fill):
+                return buf.at[rows, pos].set(
+                    jnp.where(valid, vals, fill).astype(buf.dtype))
+
+            return dict(
+                state=state,
+                toks=commit(c["toks"], outp.out_tokens, 0),
+                # src flag: 0 = draft, 1 = target
+                fd=commit(c["fd"], (~outp.from_draft).astype(jnp.int8), 0),
+                us=commit(c["us"], o_u, 0.0),
+                chs=commit(c["chs"], outp.ctx_hashes, 0),
+                msk=commit(c["msk"], outp.masked, False),
+                lens=c["lens"] + valid.sum(axis=1).astype(jnp.int32),
+                total=c["total"] + outp.out_len.sum(),
+                n_steps=c["n_steps"] + 1,
+            )
+
+        return jax.lax.while_loop(cond, body, carry)
+
+    return jax.jit(loop)
+
+
 def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
              scfg: SpecConfig, prompts, *, n_tokens: int, key,
              max_seq: Optional[int] = None,
-             extras: Optional[Dict[str, Any]] = None) -> GenerationResult:
-    """Host loop: run spec steps until every sequence has ≥ n_tokens."""
+             extras: Optional[Dict[str, Any]] = None,
+             sync_every: Optional[int] = None,
+             state: Optional[Dict[str, Any]] = None) -> GenerationResult:
+    """Device-resident generation: run spec steps until every sequence has
+    ≥ n_tokens, committing outputs into on-device buffers inside a jitted
+    while-loop.  The host is touched once per generation — or once every
+    ``sync_every`` steps when set (streaming), at which point partial
+    buffers could be flushed to a consumer.  Pass a prebuilt ``state`` to
+    reuse an existing prefill (it is consumed functionally)."""
+    if sync_every is not None and sync_every < 1:
+        raise ValueError(f"sync_every must be >= 1, got {sync_every}")
     B, S0 = prompts.shape
-    max_steps = int(np.ceil(n_tokens / 1.0))  # worst case 1 token/step
+    max_steps = n_tokens                      # worst case 1 token/step
     # a fast sequence can commit K+1 tokens on every step while the slowest
     # commits 1 — size the cache for the worst case so writes never clip.
     max_seq = max_seq or (S0 + 1 + (scfg.K + 1) * max_steps + 2)
-    state = init_state(t_params, d_params, tcfg, dcfg, scfg, prompts,
-                       max_seq, key, extras=extras)
-    step = jitted_spec_step(tcfg, dcfg, scfg)
+    if state is None:
+        state = init_state(t_params, d_params, tcfg, dcfg, scfg, prompts,
+                           max_seq, key, extras=extras)
 
     K1 = scfg.K + 1
-    toks = np.zeros((B, n_tokens + K1 + 1), np.int32)
-    fd = np.zeros_like(toks, np.int8)
-    us = np.zeros(toks.shape, np.float32)
-    chs = np.zeros(toks.shape, np.uint32)
-    msk = np.zeros(toks.shape, bool)
+    cap = n_tokens + K1 + 1
     # slot 0 = the first token sampled at prefill (from target, ζ^T, ctx =
-    # prompt tail)
-    toks[:, 0] = np.asarray(state["last"])
-    fd[:, 0] = 1
+    # prompt tail); the extra trailing column receives clipped writes.
     c = scfg.ctx_window
     w0 = prompts[:, -c:]
     if w0.shape[1] < c:
         w0 = jnp.pad(w0, ((0, 0), (c - w0.shape[1], 0)))
-    chs[:, 0] = np.asarray(prf.context_hash(w0))
-    us[:, 0] = np.asarray(jax.vmap(
-        lambda ch: prf.accept_uniform(key, ch))(prf.context_hash(w0)))
-    lens = np.ones((B,), np.int32)
-    total_emitted = 0
-    n_steps = 0
-    for _ in range(max_steps):
-        if lens.min() >= n_tokens:
-            break
-        state, outp = step(t_params, d_params, state, key)
-        o_t = np.asarray(outp.out_tokens)
-        o_l = np.asarray(outp.out_len)
-        o_f = np.asarray(outp.from_draft)
-        o_u = np.concatenate(
-            [np.asarray(outp.u), np.zeros((B, 1), np.float32)], axis=1)
-        o_h = np.asarray(outp.ctx_hashes)
-        o_m = np.asarray(outp.masked)
-        for b in range(B):
-            n = min(int(o_l[b]), toks.shape[1] - int(lens[b]))
-            if n <= 0:
-                continue
-            sl = slice(lens[b], lens[b] + n)
-            toks[b, sl] = o_t[b, :n]
-            fd[b, sl] = ~o_f[b, :n]     # src: 0 = draft, 1 = target
-            us[b, sl] = o_u[b, :n]
-            chs[b, sl] = o_h[b, :n]
-            msk[b, sl] = o_m[b, :n]
-            lens[b] += n
-        total_emitted += int(o_l.sum())
-        n_steps += 1
-    aatps = total_emitted / max(n_steps * B, 1)
-    return GenerationResult(tokens=toks, lengths=lens, from_draft=fd,
-                            u=us, ctx_hashes=chs, masked=msk,
-                            aatps=float(aatps), n_steps=n_steps)
+    ch0 = prf.context_hash(w0)
+    carry = {
+        "state": state,
+        "toks": jnp.zeros((B, cap + 1), jnp.int32)
+                   .at[:, 0].set(state["last"]),
+        "fd": jnp.zeros((B, cap + 1), jnp.int8).at[:, 0].set(1),
+        "us": jnp.zeros((B, cap + 1), jnp.float32).at[:, 0].set(
+            jax.vmap(lambda ch: prf.accept_uniform(key, ch))(ch0)),
+        "chs": jnp.zeros((B, cap + 1), jnp.uint32).at[:, 0].set(ch0),
+        "msk": jnp.zeros((B, cap + 1), bool),
+        "lens": jnp.ones((B,), jnp.int32),
+        "total": jnp.zeros((), jnp.int32),
+        "n_steps": jnp.zeros((), jnp.int32),
+    }
+    loop = _jitted_gen_loop(tcfg, dcfg, scfg)
+    if sync_every is None:
+        carry = loop(t_params, d_params, carry, key,
+                     jnp.int32(n_tokens), jnp.int32(max_steps))
+    else:
+        done = 0
+        while done < max_steps:
+            done = min(done + sync_every, max_steps)
+            carry = loop(t_params, d_params, carry, key,
+                         jnp.int32(n_tokens), jnp.int32(done))
+            if int(np.asarray(carry["lens"]).min()) >= n_tokens:
+                break
+    n_steps = int(np.asarray(carry["n_steps"]))
+    aatps = int(np.asarray(carry["total"])) / max(n_steps * B, 1)
+    return GenerationResult(
+        tokens=np.asarray(carry["toks"])[:, :cap],
+        lengths=np.asarray(carry["lens"]),
+        from_draft=np.asarray(carry["fd"])[:, :cap],
+        u=np.asarray(carry["us"])[:, :cap],
+        ctx_hashes=np.asarray(carry["chs"])[:, :cap],
+        masked=np.asarray(carry["msk"])[:, :cap],
+        aatps=float(aatps), n_steps=n_steps)

@@ -177,9 +177,11 @@ def _ambient_mesh():
             return m
     except Exception:  # pragma: no cover - API drift safety
         pass
-    m = jax.sharding.get_abstract_mesh()
-    if m is not None and getattr(m, "axis_names", ()):
-        return m
+    get_abstract = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abstract is not None:
+        m = get_abstract()
+        if m is not None and getattr(m, "axis_names", ()):
+            return m
     return None
 
 

@@ -10,8 +10,8 @@ from repro import sharding as sh
 from repro.configs import ASSIGNED_ARCHS, INPUT_SHAPES, get_config
 from repro.models import model as M
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH_MP = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 
 
 def _check_spec_tree(tree_abs, specs, mesh):

@@ -1,0 +1,190 @@
+"""Fused watermarked verification tail: Pallas kernel vs jnp mirror
+(bit-exact), and the fused engine path vs the jnp engine tail
+(token-identical for the same PRF key)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(1234)
+
+
+def _inputs(B, K, V, seed=0, seen_frac=0.3):
+    ks = jax.random.split(jax.random.key(seed), 7)
+    p = jax.nn.softmax(jax.random.normal(ks[0], (B, K + 1, V)))
+    q = jax.nn.softmax(jax.random.normal(ks[1], (B, K, V)))
+    toks = jax.random.randint(ks[2], (B, K), 0, V)
+    u = jax.random.uniform(ks[3], (B, K))
+    wms = jax.random.bits(ks[4], (B, K + 1), dtype=jnp.uint32)
+    pls = jax.random.bits(ks[5], (B, K + 1), dtype=jnp.uint32)
+    seen = (jax.random.uniform(ks[6], (B, K + 1)) < seen_frac)
+    return p, q, toks, u, wms, pls, seen
+
+
+def _assert_match(outs_k, outs_r, msg=""):
+    for a, b, nm in zip(outs_k, outs_r, ["n_acc", "acc", "etok", "eu"]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6,
+                                   err_msg=f"{msg}:{nm}")
+
+
+# K sweep incl. K=1; vocabs off the 128-lane grid exercise the padding path
+@pytest.mark.parametrize("B,K,V", [(2, 1, 64), (3, 4, 257), (2, 8, 1000),
+                                   (4, 4, 4096)])
+def test_kernel_matches_ref_sweep(B, K, V):
+    args = _inputs(B, K, V, seed=B * K + V)
+    outs_k = ops.spec_verify_wm(*args, interpret=True)
+    outs_r = jax.jit(ref.spec_verify_wm_ref)(*args)
+    _assert_match(outs_k, outs_r, f"{(B, K, V)}")
+
+
+def test_all_accept_emits_bonus():
+    """u = 0 accepts every slot: n_acc = K and the extra token races over
+    the bonus distribution p_K."""
+    B, K, V = 3, 4, 257
+    p, q, toks, _, wms, pls, seen = _inputs(B, K, V, seed=1, seen_frac=0.0)
+    u = jnp.zeros((B, K))
+    n_acc, acc, etok, eu = ops.spec_verify_wm(p, q, toks, u, wms, pls, seen,
+                                              interpret=True)
+    assert np.all(np.asarray(n_acc) == K)
+    assert np.all(np.asarray(acc) == 1)
+    # mirror of the race over p_K with the zeta^T seed
+    from repro.core import prf
+    w = jnp.arange(V, dtype=jnp.uint32)
+
+    def bonus_ref(pr, s):
+        uv = prf.kernel_uniform(s, w)
+        sc = jnp.where(pr > 0, jnp.log(uv) / jnp.maximum(pr, 1e-30),
+                       -jnp.inf)
+        return jnp.argmax(sc)
+
+    want = jax.vmap(bonus_ref)(p[:, K], wms[:, K])
+    assert np.array_equal(np.asarray(etok), np.asarray(want))
+    assert np.all((np.asarray(eu) > 0) & (np.asarray(eu) < 1))
+
+
+def test_first_slot_reject_emits_residual():
+    """u = 1 rejects slot 0: n_acc = 0 and the extra token races over
+    (p_0 − q_0)_+ (never a token where q >= p)."""
+    B, K, V = 3, 4, 128
+    p, q, toks, _, wms, pls, seen = _inputs(B, K, V, seed=2, seen_frac=0.0)
+    u = jnp.ones((B, K))
+    n_acc, acc, etok, _ = ops.spec_verify_wm(p, q, toks, u, wms, pls, seen,
+                                             interpret=True)
+    assert np.all(np.asarray(n_acc) == 0)
+    assert np.all(np.asarray(acc) == 0)
+    r = np.asarray(p[:, 0] - q[:, 0])
+    picked = r[np.arange(B), np.asarray(etok)]
+    assert np.all(picked > 0)
+
+
+def test_seen_mask_switches_stream():
+    """With all slots seen, output depends only on the plain seeds; with no
+    slot seen, only on the watermark seeds."""
+    B, K, V = 2, 3, 128
+    p, q, toks, u, wms, pls, _ = _inputs(B, K, V, seed=3)
+    wms2 = wms ^ jnp.uint32(0xDEADBEEF)
+    pls2 = pls ^ jnp.uint32(0xBADC0FFE)
+    all_seen = jnp.ones((B, K + 1), bool)
+    none_seen = jnp.zeros((B, K + 1), bool)
+    base = ops.spec_verify_wm(p, q, toks, u, wms, pls, all_seen,
+                              interpret=True)
+    swap_wm = ops.spec_verify_wm(p, q, toks, u, wms2, pls, all_seen,
+                                 interpret=True)
+    _assert_match(base, swap_wm, "seen ignores wm seeds")
+    base = ops.spec_verify_wm(p, q, toks, u, wms, pls, none_seen,
+                              interpret=True)
+    swap_pl = ops.spec_verify_wm(p, q, toks, u, wms, pls2, none_seen,
+                                 interpret=True)
+    _assert_match(base, swap_pl, "unseen ignores plain seeds")
+
+
+def test_cpu_fast_path_matches_interpret():
+    """ops.spec_verify_wm's CPU default (the jnp mirror) must agree with
+    the staged Pallas program run under the interpreter."""
+    args = _inputs(3, 4, 300, seed=4)
+    _assert_match(ops.spec_verify_wm(*args),
+                  ops.spec_verify_wm(*args, interpret=True), "fast-path")
+
+
+# ---------------------------------------------------------------------------
+# Engine-level parity: fused tail vs jnp tail, same PRF key -> same tokens.
+# ---------------------------------------------------------------------------
+
+V_ENG = 96  # deliberately not a multiple of 128
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    tcfg = get_smoke_config("yi-6b", vocab=V_ENG, d_model=64, d_ff=128,
+                            n_heads=2, n_kv_heads=2, head_dim=32)
+    dcfg = get_smoke_config("yi-6b", n_layers=1, vocab=V_ENG, d_model=32,
+                            d_ff=64, n_heads=2, n_kv_heads=2, head_dim=16)
+    tp = M.init_params(jax.random.key(0), tcfg)
+    dp = M.init_params(jax.random.key(1), dcfg)
+    return tcfg, dcfg, tp, dp
+
+
+@pytest.mark.parametrize("wm", ["gumbel", "none"])
+@pytest.mark.parametrize("K", [1, 4])
+def test_engine_fused_matches_jnp_tail(engine_pair, wm, K):
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = engine_pair
+    prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V_ENG)
+    sc_f = E.SpecConfig(K=K, watermark=wm, fused="on",
+                        accept="pseudorandom" if wm != "none"
+                        else "standard")
+    sc_j = dataclasses.replace(sc_f, fused="off")
+    assert E.use_fused(sc_f) and not E.use_fused(sc_j)
+    state = E.init_state(tp, dp, tcfg, dcfg, sc_f, prompts, 64, KEY)
+    step_f = jax.jit(E.make_spec_step(tcfg, dcfg, sc_f))
+    step_j = jax.jit(E.make_spec_step(tcfg, dcfg, sc_j))
+    st_f, st_j = state, state
+    for _ in range(3):   # divergent per-sequence positions after step 1
+        st_f, o_f = step_f(tp, dp, st_f, KEY)
+        st_j, o_j = step_j(tp, dp, st_j, KEY)
+        for name in ("out_tokens", "out_len", "n_accepted", "from_draft",
+                     "u", "ctx_hashes", "masked"):
+            a = np.asarray(getattr(o_f, name))
+            b = np.asarray(getattr(o_j, name))
+            assert np.array_equal(a, b), (wm, K, name)
+        assert np.array_equal(np.asarray(st_f["hist"]),
+                              np.asarray(st_j["hist"]))
+        assert np.array_equal(np.asarray(st_f["hist_n"]),
+                              np.asarray(st_j["hist_n"]))
+
+
+def test_generate_fused_matches_jnp(engine_pair):
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = engine_pair
+    prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V_ENG)
+    sc_f = E.SpecConfig(K=3, watermark="gumbel")
+    sc_j = dataclasses.replace(sc_f, fused="off")
+    rf = E.generate(tp, dp, tcfg, dcfg, sc_f, prompts, n_tokens=16, key=KEY)
+    rj = E.generate(tp, dp, tcfg, dcfg, sc_j, prompts, n_tokens=16, key=KEY)
+    assert np.array_equal(rf.tokens, rj.tokens)
+    assert np.array_equal(rf.lengths, rj.lengths)
+    assert rf.n_steps == rj.n_steps
+    # streaming sync points don't change the result
+    rs = E.generate(tp, dp, tcfg, dcfg, sc_f, prompts, n_tokens=16, key=KEY,
+                    sync_every=2)
+    assert np.array_equal(rf.tokens, rs.tokens)
+
+
+def test_masked_repeated_contexts_use_plain_stream(engine_pair):
+    """A degenerate prompt forces repeated contexts; the fused path must
+    flag them and still match the jnp tail exactly."""
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = engine_pair
+    prompts = jnp.ones((2, 8), jnp.int32) * 5
+    sc_f = E.SpecConfig(K=2, watermark="gumbel", mask_repeated=True)
+    sc_j = dataclasses.replace(sc_f, fused="off")
+    rf = E.generate(tp, dp, tcfg, dcfg, sc_f, prompts, n_tokens=20, key=KEY)
+    rj = E.generate(tp, dp, tcfg, dcfg, sc_j, prompts, n_tokens=20, key=KEY)
+    assert np.array_equal(rf.tokens, rj.tokens)
+    assert np.array_equal(rf.masked, rj.masked)
