@@ -1,13 +1,18 @@
 # CI entry points.  `make ci` = tier-1 tests + quick perf smoke; the perf
 # artifacts (artifacts/kernels_bench.json, artifacts/spec_step_bench.json)
 # are produced on every run so PRs carry before/after numbers.
+# `make ci-quick` skips the heavyweight arch/perf tests (@pytest.mark.slow)
+# — the push-time gate; the full `ci` runs nightly (.github/workflows).
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
-.PHONY: test bench-quick bench ci
+.PHONY: test test-quick bench-quick bench ci ci-quick
 
 test:
 	python -m pytest -x -q
+
+test-quick:
+	python -m pytest -x -q -m "not slow"
 
 bench-quick:
 	python -m benchmarks.run --quick
@@ -16,3 +21,5 @@ bench:
 	python -m benchmarks.run --fast
 
 ci: test bench-quick
+
+ci-quick: test-quick

@@ -84,7 +84,7 @@ def synthid_curves(n_seqs=96, n_tokens=100, lengths=(20, 50, 100), m=16,
     train_null, test_null = null_recs[:half], null_recs[half:]
     # psi model fit on true-source g-values of the train split
     y_true = np.concatenate([
-        np.where(r.src[:, None] == 0, r.y_draft, r.y_target)
+        np.where(r.src[:, None] == 1, r.y_draft, r.y_target)
         for r in train_wm])
     psi = synthid_detect.fit_psi(y_true, m, steps=250)
     mlp, _ = synthid_detect.fit_selector_mlp(train_wm, m, steps=400)

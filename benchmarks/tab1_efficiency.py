@@ -73,22 +73,28 @@ def run(n_tokens: int = 48, batch: int = 8, verbose: bool = True):
             total = int(res.lengths.sum())
             ptt = dt / total * 1e3
             lp = common.logppl(tp, tcfg, res.tokens[:, :n_tokens])
+            # AATPS counts *accepted draft* tokens only; TPS additionally
+            # counts the per-step extra (residual/bonus) token (= AATPS+1).
             rows.append({"method": label, "K": K, "AATPS": res.aatps,
+                         "TPS": res.tokens_per_step,
                          "PTT_ms": round(ptt, 3), "LOGPPL": round(lp, 4)})
             if verbose:
                 print(f"tab1,{label},K={K},AATPS={res.aatps:.4f},"
+                      f"TPS={res.tokens_per_step:.4f},"
                       f"PTT={ptt:.2f}ms,LOGPPL={lp:.4f}")
 
-    # basic (non-speculative) watermark rows: AATPS = 1 by construction
+    # basic (non-speculative) watermark rows: one target token per step by
+    # construction — no drafts, so AATPS = 0 and TPS = 1.
     for wm, label in [("gumbel", "Gumbel-max"), ("synthid", "SynthID")]:
         scfg = E.SpecConfig(K=1, watermark=wm, m=30,
                             temperature=0.5 if wm == "gumbel" else 0.7)
         ptt = basic_watermark_generate(tp, tcfg, scfg, prompts,
                                        n_tokens // 2, key)
-        rows.append({"method": f"basic {label}", "K": 0, "AATPS": 1.0,
-                     "PTT_ms": round(ptt, 3), "LOGPPL": None})
+        rows.append({"method": f"basic {label}", "K": 0, "AATPS": 0.0,
+                     "TPS": 1.0, "PTT_ms": round(ptt, 3), "LOGPPL": None})
         if verbose:
-            print(f"tab1,basic {label},K=0,AATPS=1.0,PTT={ptt:.2f}ms")
+            print(f"tab1,basic {label},K=0,AATPS=0.0,TPS=1.0,"
+                  f"PTT={ptt:.2f}ms")
 
     os.makedirs(ART, exist_ok=True)
     with open(os.path.join(ART, "tab1_efficiency.json"), "w") as f:

@@ -31,8 +31,10 @@ def main():
     prompts = common.bench_prompts(cp, 8)
     res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=100,
                      key=key)
-    print(f"AATPS (accepted tokens/step): {res.aatps:.2f}  "
-          f"[1 = no speedup, K+1 = max]")
+    print(f"AATPS (accepted draft tokens/step): {res.aatps:.2f}  "
+          f"[0 = no draft accepted, K = max]")
+    print(f"tokens/step (incl. the extra target token): "
+          f"{res.tokens_per_step:.2f}  [1 = no speedup, K+1 = max]")
     from repro.data.synthetic import decode_bytes
     print("sample:", decode_bytes(res.tokens[0, :100])[:70], "...")
 

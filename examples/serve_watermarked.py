@@ -24,7 +24,7 @@ from repro.serve import engine as E
 
 def serve(tcfg, dcfg, tp, dp, cp, scfg, *, n_batches, batch, n_tokens,
           key):
-    all_recs, aatps, toks_total = [], [], 0
+    all_recs, aatps, tps, toks_total = [], [], [], 0
     dec = E.make_decoder(scfg)
     t0 = time.perf_counter()
     for i in range(n_batches):
@@ -32,13 +32,14 @@ def serve(tcfg, dcfg, tp, dp, cp, scfg, *, n_batches, batch, n_tokens,
         res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts,
                          n_tokens=n_tokens, key=key)
         aatps.append(res.aatps)
+        tps.append(res.tokens_per_step)
         toks_total += int(res.lengths.sum())
         if scfg.watermark != "none":
             all_recs += pipeline.records_from_generation(
                 res, dec, key, tcfg.vocab, n_tokens=n_tokens)
     dt = time.perf_counter() - t0
-    return {"aatps": float(np.mean(aatps)), "tok_per_s": toks_total / dt,
-            "records": all_recs}
+    return {"aatps": float(np.mean(aatps)), "tps": float(np.mean(tps)),
+            "tok_per_s": toks_total / dt, "records": all_recs}
 
 
 def main():
@@ -64,8 +65,10 @@ def main():
                 n_batches=args.batches, batch=args.batch,
                 n_tokens=args.tokens, key=key)
     print(f"Alg.1 (gumbel):   AATPS={wm['aatps']:.3f}  "
+          f"tokens/step={wm['tps']:.3f}  "
           f"throughput={wm['tok_per_s']:.1f} tok/s")
     print(f"Std. SpecSampl.:  AATPS={std['aatps']:.3f}  "
+          f"tokens/step={std['tps']:.3f}  "
           f"throughput={std['tok_per_s']:.1f} tok/s")
     print("-> Alg.1 keeps the speculative speedup (Thm 4.1b)")
 

@@ -41,7 +41,7 @@ def select_prior(rec: SeqRecord, p: float, rng: np.random.Generator):
 
 
 def select_oracle(rec: SeqRecord) -> np.ndarray:
-    return np.where(rec.src == 0, rec.y_draft, rec.y_target)
+    return np.where(rec.src == 1, rec.y_draft, rec.y_target)
 
 
 def scores_tau(records: Sequence[SeqRecord], tau: float, n_tokens: int):

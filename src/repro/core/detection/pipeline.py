@@ -46,7 +46,8 @@ def records_from_generation(res: GenerationResult, dec: Decoder, key,
         y_d = _stats(dec, toks, key, hashes, prf.STREAM_DRAFT, vocab)
         y_t = _stats(dec, toks, key, hashes, prf.STREAM_TARGET, vocab)
         u = recover_u(key, hashes)
-        acc = float(np.mean(res.from_draft[b, :n] == 0))
+        # from_draft matches StepOutput semantics: 1 = accepted draft token
+        acc = float(np.mean(res.from_draft[b, :n] == 1))
         out.append(SeqRecord(
             tokens=toks, y_draft=y_d, y_target=y_t, u=u,
             src=res.from_draft[b, :n].astype(np.int8),
@@ -58,7 +59,8 @@ def records_from_generation(res: GenerationResult, dec: Decoder, key,
 def null_records(tokens: np.ndarray, dec: Decoder, key, vocab: int, *,
                  ctx_window: int = 4) -> List[SeqRecord]:
     """Records for unwatermarked text (H0): tokens (B, N) from any source.
-    Everything is recovered exactly as for suspect text."""
+    Everything is recovered exactly as for suspect text.  ``src`` is all
+    zeros (= "not a draft token"; no ground truth exists under H0)."""
     toks = jnp.asarray(tokens, jnp.int32)
     hashes = np.asarray(prf.sliding_context_hashes(toks, ctx_window))
     out: List[SeqRecord] = []

@@ -5,8 +5,9 @@ A generation run under (watermarked) speculative sampling yields, per token:
     y^D — the detection statistic under the DRAFT stream ζ^D
     y^T — the statistic under the TARGET stream ζ^T
     u   — the acceptance coin u_t = G(ζ^R_t)  (Alg. 1 only; recoverable)
-    src — ground-truth source (0 = draft, 1 = target/residual/bonus),
-          available only to the Oracle detector and for MLP training.
+    src — ground-truth source (1 = accepted draft token, 0 = target/
+          residual/bonus — matching ``StepOutput.from_draft``), available
+          only to the Oracle detector and for MLP training.
 
 Gumbel statistics are scalars (the recovered U value); SynthID statistics
 are m-vectors of g-bits.

@@ -105,7 +105,7 @@ def scores_oracle(psi_params, records: Sequence[SeqRecord],
     out = []
     for r in records:
         r = r.truncate(n_tokens).dedupe()
-        q = (r.src == 0).astype(np.float32)
+        q = (r.src == 1).astype(np.float32)
         out.append(float(_seq_score(
             psi_params, jnp.asarray(r.y_draft, jnp.float32),
             jnp.asarray(r.y_target, jnp.float32), jnp.asarray(q))))
@@ -125,7 +125,7 @@ def fit_selector_mlp(records_wm: Sequence[SeqRecord], m: int, *,
     for r in records_wm:
         xs.append(np.concatenate([r.y_draft, r.y_target], axis=-1))
         us.append(r.u)
-        labels.append((r.src == 0).astype(np.float32))
+        labels.append((r.src == 1).astype(np.float32))
     data = {
         "x": jnp.asarray(np.concatenate(xs), jnp.float32),
         "u": jnp.asarray(np.concatenate(us), jnp.float32),

@@ -45,15 +45,9 @@ def spec_verify(p, q, draft_tokens, u, resid_seeds, *,
                               interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, *,
-                   interpret: bool | None = None):
-    """Fused watermarked verification tail.  On TPU this stages the Mosaic
-    kernel; on CPU the default is the *bit-exact jnp mirror* of the kernel
-    program (``ref.spec_verify_wm_ref`` — parity enforced by tests), because
-    the Pallas interpreter walks the (B,) grid serially and is ~8x slower
-    than the XLA-compiled mirror.  Pass ``interpret=True`` to force the
-    interpreter (kernel validation)."""
+def _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds, plain_seeds,
+                          seen, *, interpret: bool | None):
+    """Single-shard body of ``spec_verify_wm`` (grid spans the local batch)."""
     if interpret is None and _interpret_default():
         from repro.kernels import ref as _ref
         return _ref.spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds,
@@ -61,3 +55,32 @@ def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, *,
     interpret = False if interpret is None else interpret
     return spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds,
                                  plain_seeds, seen, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret", "mesh", "batch_axes"))
+def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, *,
+                   interpret: bool | None = None, mesh=None,
+                   batch_axes: tuple | None = None):
+    """Fused watermarked verification tail.  On TPU this stages the Mosaic
+    kernel; on CPU the default is the *bit-exact jnp mirror* of the kernel
+    program (``ref.spec_verify_wm_ref`` — parity enforced by tests), because
+    the Pallas interpreter walks the (B,) grid serially and is ~8x slower
+    than the XLA-compiled mirror.  Pass ``interpret=True`` to force the
+    interpreter (kernel validation).
+
+    With ``mesh`` + ``batch_axes`` the call runs under ``shard_map`` over
+    the batch dim: every input/output is batch-sharded on ``batch_axes``
+    and the kernel's ``grid=(B,)`` spans the *per-shard local* batch — no
+    cross-shard communication (the tail is row-independent).  The global
+    batch must divide the axes' size."""
+    if mesh is None or not batch_axes:
+        return _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds,
+                                     plain_seeds, seen,
+                                     interpret=interpret)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
+    fn = partial(_spec_verify_wm_local, interpret=interpret)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 7,
+                     out_specs=(spec,) * 4, check_rep=False)(
+        p, q, draft_tokens, u, wm_seeds, plain_seeds, seen)

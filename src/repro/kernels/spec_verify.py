@@ -23,6 +23,11 @@ K drafts are accepted — selecting the PRF stream in-kernel: repeated
 contexts (Hu et al.'s ``seen`` mask) race with the non-watermark stream
 seed instead of the ζ^T one.  Exactly one (V,)-sized race runs per row,
 replacing the engine's former O(K·V)-per-row residual materialization.
+
+Both kernels are written against the *local* batch: on a mesh, the
+``ops.spec_verify_wm`` wrapper shard_maps the call over the dp axes, so
+``grid=(B,)`` here spans the per-shard batch rows — every row is
+independent, so the sharded program stays collective-free.
 """
 from __future__ import annotations
 

@@ -31,7 +31,6 @@ from repro.serve import engine as E                  # noqa: E402
 from repro.train import loop as TL                   # noqa: E402
 
 NS = jax.sharding.NamedSharding
-P = jax.sharding.PartitionSpec
 
 ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                             "artifacts", "dryrun")
@@ -224,40 +223,25 @@ def lower_case(arch: str, shape_name: str, mesh, *, k_lookahead: int = 4,
             lowered = jitted.lower(specs["params"], specs["batch"])
         return lowered
 
-    # ---- decode: the speculative serve step (Alg. 1) ----
+    # ---- decode: the full sharded serve step (Alg. 1) ----
+    # Routed through the engine's own mesh-aware jit builder, so the
+    # dry-run lowers the exact program `generate(mesh=...)` serves with:
+    # state + StepOutput batch-sharded via sharding.engine_state_specs,
+    # the fused verify tail shard_mapped onto the per-shard local batch.
     dcfg = draft_for(cfg)
     if opt:
         dcfg = apply_opt(dcfg)
     scfg = E.SpecConfig(K=k_lookahead)
     p_spec = sh.param_specs(specs["params"], mesh)
     dp_spec = sh.param_specs(specs["d_params"], mesh)
-    st_spec = state_specs(specs["state"], mesh, global_batch=B)
-    step = E.make_spec_step(cfg, dcfg, scfg)
-    jitted = jax.jit(
-        step,
-        in_shardings=(jax.tree.map(lambda s: NS(mesh, s), p_spec),
-                      jax.tree.map(lambda s: NS(mesh, s), dp_spec),
-                      jax.tree.map(lambda s: NS(mesh, s), st_spec),
-                      None),
-        out_shardings=(jax.tree.map(lambda s: NS(mesh, s), st_spec), None))
+    jitted = E.jitted_spec_step(
+        cfg, dcfg, scfg, mesh, state_abs=specs["state"],
+        t_shardings=jax.tree.map(lambda s: NS(mesh, s), p_spec),
+        d_shardings=jax.tree.map(lambda s: NS(mesh, s), dp_spec))
     with mesh:
         lowered = jitted.lower(specs["params"], specs["d_params"],
                                specs["state"], specs["key"])
     return lowered
-
-
-def state_specs(state_abstract, mesh, *, global_batch: int):
-    """PartitionSpecs for the engine state dict."""
-    t_spec = sh.cache_specs(state_abstract["t_cache"], mesh,
-                            global_batch=global_batch)
-    d_spec = sh.cache_specs(state_abstract["d_cache"], mesh,
-                            global_batch=global_batch)
-    bvec = sh.batch_spec(
-        {k: state_abstract[k] for k in
-         ("window", "last", "n_committed", "hist", "hist_n")},
-        mesh, global_batch=global_batch)
-    return dict(t_cache=t_spec, d_cache=d_spec, **bvec,
-                step_idx=P())
 
 
 # ---------------------------------------------------------------------------

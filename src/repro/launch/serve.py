@@ -4,10 +4,18 @@ serve step on the production mesh).
 
     PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b \
         --watermark gumbel --k 3 --tokens 32
+
+Mesh-aware serving: ``--mesh DATAxMODEL`` runs the engine sharded over a
+host mesh (state/buffers batch-sharded, params by the production rules).
+``--devices N`` forces N fake CPU devices (must be the first jax init), so
+the sharded path validates on one machine:
+
+    PYTHONPATH=src python -m repro.launch.serve --devices 8 --mesh 8x1
 """
 from __future__ import annotations
 
 import argparse
+import os
 
 
 def main():
@@ -25,10 +33,20 @@ def main():
     ap.add_argument("--shape", default="decode_32k",
                     choices=["decode_32k", "long_500k"])
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default="",
+                    help="run the engine sharded on a DATAxMODEL host mesh "
+                         "(e.g. 8x1); batch must divide the data ways")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N fake CPU devices before jax init "
+                         "(single-machine validation of --mesh)")
     args = ap.parse_args()
 
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
     if args.dry_run:
-        import os
         import subprocess
         import sys
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
@@ -71,12 +89,19 @@ def main():
         extras = {k: v for k, v in b.items() if k != "tokens"}
     scfg = E.SpecConfig(K=args.k, watermark=args.watermark,
                         accept=args.accept, temperature=args.temperature)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_host_mesh
+        data, model = (int(x) for x in args.mesh.split("x"))
+        mesh = make_host_mesh(data=data, model=model)
+        print(f"serving sharded on {mesh}")
     res = E.generate(t_params, d_params, tcfg, dcfg, scfg, prompts,
-                     n_tokens=args.tokens, key=key, extras=extras)
+                     n_tokens=args.tokens, key=key, extras=extras,
+                     mesh=mesh)
     print(f"arch={args.arch} watermark={args.watermark} "
           f"accept={args.accept} K={args.k}")
-    print(f"AATPS={res.aatps:.3f} steps={res.n_steps} "
-          f"tokens={int(res.lengths.sum())}")
+    print(f"AATPS={res.aatps:.3f} tokens/step={res.tokens_per_step:.3f} "
+          f"steps={res.n_steps} tokens={int(res.lengths.sum())}")
     print("sample bytes:", synthetic.decode_bytes(
         res.tokens[0, :args.tokens])[:60])
 

@@ -26,6 +26,23 @@ one jitted ``while_loop`` with a single host sync per generation (or per
 Divergent acceptance is handled with per-sequence cache positions (B,)
 throughout — no host-side re-batching.
 
+**Sharded execution** (pass ``mesh=``): the engine state and every output
+buffer shard their batch dim over the mesh's dp axes (("pod","data"), via
+``sharding.engine_state_specs``); model caches additionally shard kv-heads
+/ recurrent channels over "model"; the watermark key and scalar step state
+replicate.  ``jitted_spec_step`` / ``_jitted_gen_loop`` take the mesh plus
+explicit in/out shardings, and the fused ``spec_verify_wm`` tail runs its
+``grid=(B,)`` on the per-shard *local* batch via ``shard_map`` (the tail is
+row-independent, so no collectives are added).  Sharded ``generate`` emits
+bit-identical tokens/coins to the single-device path — parity is enforced
+by ``tests/test_engine_sharded.py`` on a forced 8-device CPU mesh.
+
+``generate`` also supports chained resume: the returned ``state`` can be
+passed back (``generate(..., state=res.state)``) and continues exactly
+where the previous call stopped — slot-0 metadata (context hash, coin,
+masked flag) is carried in the state (``last_ctx``/``last_u``/
+``last_msk``), never recomputed from the prompt tail.
+
 Repeated-context masking (Hu et al. 2024): a per-sequence history of used
 context hashes; a position whose context was already used samples from the
 *raw* distribution with non-watermark randomness, preserving sequence-level
@@ -35,12 +52,12 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from functools import partial
 from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import prf, speculative as spec
@@ -48,6 +65,7 @@ from repro.core import watermark as _wm  # noqa: F401  (register decoders)
 from repro.core.watermark.base import Decoder, get_decoder
 from repro.kernels import ops as KOPS
 from repro.models import model as M
+from repro.sharding import rules as SHR
 
 EPS = 1e-30
 
@@ -163,6 +181,12 @@ def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         "d_cache": d_cache,
         "window": window,          # (B, c) — ends at the pending last token
         "last": first,             # (B,) committed but not yet consumed
+        # slot-0 metadata of ``last`` (resume path: never recomputed from
+        # the prompt tail) — the context it was sampled under, its recorded
+        # acceptance coin, and its repeated-context flag.
+        "last_ctx": ctx0,
+        "last_u": jax.vmap(lambda ch: prf.accept_uniform(key, ch))(ctx0),
+        "last_msk": jnp.zeros((B,), bool),
         "n_committed": jnp.full((B,), S0 + 1, jnp.int32),
         "hist": hist,              # (B, H) used context hashes
         "hist_n": jnp.ones((B,), jnp.int32),
@@ -185,6 +209,9 @@ def abstract_state(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         "d_cache": d_cache,
         "window": sds((batch, c), jnp.int32),
         "last": sds((batch,), jnp.int32),
+        "last_ctx": sds((batch,), jnp.uint32),
+        "last_u": sds((batch,), jnp.float32),
+        "last_msk": sds((batch,), jnp.bool_),
         "n_committed": sds((batch,), jnp.int32),
         "hist": sds((batch, scfg.history_cap), jnp.uint32),
         "hist_n": sds((batch,), jnp.int32),
@@ -196,10 +223,23 @@ class StepOutput(NamedTuple):
     out_tokens: jnp.ndarray    # (B, K+1) int32, zero-padded past out_len
     out_len: jnp.ndarray       # (B,) int32 in [1, K+1]
     n_accepted: jnp.ndarray    # (B,) int32 in [0, K]
-    from_draft: jnp.ndarray    # (B, K+1) bool
+    from_draft: jnp.ndarray    # (B, K+1) bool — 1 = accepted draft token
     u: jnp.ndarray             # (B, K) acceptance coins
     ctx_hashes: jnp.ndarray    # (B, K+1) uint32, per emitted-slot context
     masked: jnp.ndarray        # (B, K+1) bool — repeated-context positions
+
+
+def abstract_step_output(scfg: SpecConfig, batch: int) -> StepOutput:
+    """ShapeDtypeStruct stand-in of a StepOutput (sharded lowering)."""
+    sds, K1 = jax.ShapeDtypeStruct, scfg.K + 1
+    return StepOutput(
+        out_tokens=sds((batch, K1), jnp.int32),
+        out_len=sds((batch,), jnp.int32),
+        n_accepted=sds((batch,), jnp.int32),
+        from_draft=sds((batch, K1), jnp.bool_),
+        u=sds((batch, scfg.K), jnp.float32),
+        ctx_hashes=sds((batch, K1), jnp.uint32),
+        masked=sds((batch, K1), jnp.bool_))
 
 
 # ---------------------------------------------------------------------------
@@ -266,11 +306,16 @@ def _rollback(cache, checkpoints, pos0, out_len):
     return cache
 
 
-def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
-                   ) -> Callable:
+def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
+                   mesh=None) -> Callable:
     """Build the jittable spec_step(t_params, d_params, state, key)
     -> (state, StepOutput).  ``key`` is the watermark key (static stream
-    derivation) — in ``standard`` accept mode it also feeds fresh coins."""
+    derivation) — in ``standard`` accept mode it also feeds fresh coins.
+
+    With ``mesh`` the fused verification tail runs its per-row grid on the
+    local batch shard via ``shard_map`` over the mesh's dp axes (the rest
+    of the step shards through the caller's in/out shardings + SPMD
+    propagation)."""
     dec = make_decoder(scfg)
     K, c = scfg.K, scfg.ctx_window
     temp = scfg.temperature
@@ -364,9 +409,10 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
                 lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 3))(
                 ctx_bonus)
             plain_seeds = jnp.concatenate([pl_r, pl_b[:, None]], axis=1)
+            axes = SHR.dp_axes(mesh, B) if mesh is not None else None
             n_acc, prefix_i, extra, _ = KOPS.spec_verify_wm(
                 p_fulls, q_fulls, draft_toks, u, wm_seeds, plain_seeds,
-                all_seen)
+                all_seen, mesh=mesh if axes else None, batch_axes=axes)
             prefix = prefix_i.astype(bool)
         else:
             # ---- 4. jnp tail (synthid tournament / reference path) ---------
@@ -420,8 +466,15 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
         full = jnp.concatenate([window, out], axis=1)     # (B, c+K+1)
         idx = out_len[:, None] + jnp.arange(c)[None, :]   # window ending at n'
         new_window = jnp.take_along_axis(full, idx, axis=1)
-        new_last = jnp.take_along_axis(out, (out_len - 1)[:, None],
-                                       axis=1)[:, 0]
+        last_i = (out_len - 1)[:, None]
+        new_last = jnp.take_along_axis(out, last_i, axis=1)[:, 0]
+        # slot-0 metadata for the next buffer (chained-generate resume):
+        # the final emitted slot is always the extra (target) token, so only
+        # its context hash, recorded coin and seen flag need carrying.
+        u_rec = jnp.concatenate([u, jnp.zeros((B, 1), jnp.float32)], axis=1)
+        new_last_ctx = jnp.take_along_axis(all_hashes, last_i, axis=1)[:, 0]
+        new_last_u = jnp.take_along_axis(u_rec, last_i, axis=1)[:, 0]
+        new_last_msk = jnp.take_along_axis(all_seen, last_i, axis=1)[:, 0]
         # history append for emitted, previously-unseen contexts — a masked
         # scatter: slot s lands at (hist_n + #adds-before-s) mod H; skipped
         # slots are routed to a trash column that is sliced off.
@@ -440,6 +493,8 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
 
         new_state = dict(state, t_cache=t_cache, d_cache=d_cache,
                          window=new_window, last=new_last,
+                         last_ctx=new_last_ctx, last_u=new_last_u,
+                         last_msk=new_last_msk,
                          n_committed=state["n_committed"] + out_len,
                          hist=hist, hist_n=hist_n,
                          step_idx=state["step_idx"] + 1)
@@ -458,29 +513,109 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig
 # ---------------------------------------------------------------------------
 
 
+# ---------------------------------------------------------------------------
+# Jit wrappers — single-device (lru-cached) and mesh-aware (explicit in/out
+# shardings, memoized on (configs, mesh, abstract shapes, shardings)).
+# ---------------------------------------------------------------------------
+
+
+def _abs_tree(tree):
+    """ShapeDtypeStruct skeleton of a pytree of arrays (or of structs)."""
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), jnp.result_type(x)),
+        tree)
+
+
+def _tree_key(tree) -> Tuple:
+    """Hashable signature of a pytree of ShapeDtypeStructs / shardings."""
+    if tree is None:
+        return (None,)
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    leaves = tuple(
+        (tuple(leaf.shape), str(leaf.dtype))
+        if isinstance(leaf, jax.ShapeDtypeStruct) else leaf
+        for leaf in flat)
+    return (leaves, treedef)
+
+
+def state_shardings(state_abs, mesh) -> Dict[str, Any]:
+    """NamedShardings for the engine state: caches via the cache rules,
+    per-sequence vectors batch-sharded over dp, scalars replicated."""
+    B = state_abs["last"].shape[0]
+    specs = SHR.engine_state_specs(state_abs, mesh, global_batch=B)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def replicated_shardings(tree, mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
 @functools.lru_cache(maxsize=64)
-def jitted_spec_step(tcfg: ModelConfig, dcfg: ModelConfig,
-                     scfg: SpecConfig) -> Callable:
-    """Configs are frozen dataclasses — cache the jitted step so repeated
-    ``generate`` calls don't retrace."""
+def _jitted_spec_step_plain(tcfg: ModelConfig, dcfg: ModelConfig,
+                            scfg: SpecConfig) -> Callable:
     return jax.jit(make_spec_step(tcfg, dcfg, scfg))
+
+
+_SHARDED_JIT_CACHE: Dict[Tuple, Callable] = {}
+_SHARDED_JIT_CAP = 64    # mirror the plain path's lru_cache bound
+
+
+def _sharded_cache_put(memo: Tuple, fn: Callable) -> Callable:
+    if len(_SHARDED_JIT_CACHE) >= _SHARDED_JIT_CAP:   # evict oldest
+        _SHARDED_JIT_CACHE.pop(next(iter(_SHARDED_JIT_CACHE)))
+    _SHARDED_JIT_CACHE[memo] = fn
+    return fn
+
+
+def jitted_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
+                     mesh=None, *, state_abs=None, t_shardings=None,
+                     d_shardings=None) -> Callable:
+    """Configs are frozen dataclasses — cache the jitted step so repeated
+    ``generate`` calls don't retrace.
+
+    With ``mesh`` + ``state_abs`` (a ShapeDtypeStruct skeleton of the
+    engine state) the step is jitted with explicit in/out shardings: state
+    and StepOutput batch-sharded over the dp axes, the key replicated, and
+    params on ``t_shardings``/``d_shardings`` (None = follow the arguments,
+    e.g. pre-placed replicated params)."""
+    if mesh is None:
+        return _jitted_spec_step_plain(tcfg, dcfg, scfg)
+    assert state_abs is not None, "sharded jit needs the abstract state"
+    memo = ("step", tcfg, dcfg, scfg, mesh, _tree_key(state_abs),
+            _tree_key(t_shardings), _tree_key(d_shardings))
+    fn = _SHARDED_JIT_CACHE.get(memo)
+    if fn is None:
+        B = state_abs["last"].shape[0]
+        st_sh = state_shardings(state_abs, mesh)
+        out_specs = SHR.batch_leading_specs(
+            abstract_step_output(scfg, B), mesh, global_batch=B)
+        out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), out_specs)
+        fn = jax.jit(
+            make_spec_step(tcfg, dcfg, scfg, mesh=mesh),
+            in_shardings=(t_shardings, d_shardings, st_sh,
+                          NamedSharding(mesh, P())),
+            out_shardings=(st_sh, out_sh))
+        _sharded_cache_put(memo, fn)
+    return fn
 
 
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray          # (B, N) committed tokens (post-prompt)
     lengths: np.ndarray         # (B,) valid lengths
-    from_draft: np.ndarray      # (B, N) int8
+    from_draft: np.ndarray      # (B, N) int8 — 1 = accepted draft token,
+    #                             0 = target (first token, residual, bonus)
     u: np.ndarray               # (B, N) coins aligned to emitted slots
     ctx_hashes: np.ndarray      # (B, N) uint32
     masked: np.ndarray          # (B, N) bool
-    aatps: float                # average accepted tokens per step
+    aatps: float                # average ACCEPTED (draft) tokens per step
+    tokens_per_step: float      # emitted tokens per step (= aatps + 1)
     n_steps: int
+    state: Optional[Dict[str, Any]] = None   # final engine state (resume)
 
 
-@functools.lru_cache(maxsize=64)
-def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig,
-                     scfg: SpecConfig) -> Callable:
+def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
+                   mesh=None) -> Callable:
     """Device-resident multi-step loop: while any sequence is short (and the
     step budget remains), run spec_step and scatter-commit its outputs into
     the preallocated output buffers — no host sync, no per-sequence loop.
@@ -488,7 +623,7 @@ def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig,
     Each buffer has one trailing trash column; a slot's write position is
     ``lens[b] + s`` when it is a valid emission that still fits, else the
     trash column (sliced off by the caller)."""
-    step = make_spec_step(tcfg, dcfg, scfg)
+    step = make_spec_step(tcfg, dcfg, scfg, mesh=mesh)
     K1 = scfg.K + 1
 
     def loop(t_params, d_params, carry, key, n_tokens, step_limit):
@@ -516,19 +651,60 @@ def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig,
             return dict(
                 state=state,
                 toks=commit(c["toks"], outp.out_tokens, 0),
-                # src flag: 0 = draft, 1 = target
-                fd=commit(c["fd"], (~outp.from_draft).astype(jnp.int8), 0),
+                # src flag, matching StepOutput.from_draft: 1 = draft
+                fd=commit(c["fd"], outp.from_draft.astype(jnp.int8), 0),
                 us=commit(c["us"], o_u, 0.0),
                 chs=commit(c["chs"], outp.ctx_hashes, 0),
                 msk=commit(c["msk"], outp.masked, False),
                 lens=c["lens"] + valid.sum(axis=1).astype(jnp.int32),
                 total=c["total"] + outp.out_len.sum(),
+                acc_total=c["acc_total"] + outp.n_accepted.sum(),
                 n_steps=c["n_steps"] + 1,
             )
 
         return jax.lax.while_loop(cond, body, carry)
 
-    return jax.jit(loop)
+    return loop
+
+
+@functools.lru_cache(maxsize=64)
+def _jitted_gen_loop_plain(tcfg: ModelConfig, dcfg: ModelConfig,
+                           scfg: SpecConfig) -> Callable:
+    return jax.jit(_make_gen_loop(tcfg, dcfg, scfg))
+
+
+def carry_shardings(carry_abs, mesh) -> Dict[str, Any]:
+    """NamedShardings for the generation-loop carry: engine state via the
+    state rules, output buffers batch-sharded, counters replicated."""
+    B = carry_abs["lens"].shape[0]
+    rest = SHR.batch_leading_specs(
+        {k: v for k, v in carry_abs.items() if k != "state"},
+        mesh, global_batch=B)
+    rest_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), rest)
+    return dict(rest_sh, state=state_shardings(carry_abs["state"], mesh))
+
+
+def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
+                     mesh=None, *, carry_abs=None, t_shardings=None,
+                     d_shardings=None) -> Callable:
+    """The jitted generation loop.  With ``mesh`` + ``carry_abs`` it is
+    compiled with explicit in/out shardings (carry batch-sharded over dp,
+    key and scalar limits replicated, params on the given shardings)."""
+    if mesh is None:
+        return _jitted_gen_loop_plain(tcfg, dcfg, scfg)
+    assert carry_abs is not None, "sharded jit needs the abstract carry"
+    memo = ("loop", tcfg, dcfg, scfg, mesh, _tree_key(carry_abs),
+            _tree_key(t_shardings), _tree_key(d_shardings))
+    fn = _SHARDED_JIT_CACHE.get(memo)
+    if fn is None:
+        c_sh = carry_shardings(carry_abs, mesh)
+        rep = NamedSharding(mesh, P())
+        fn = jax.jit(
+            _make_gen_loop(tcfg, dcfg, scfg, mesh=mesh),
+            in_shardings=(t_shardings, d_shardings, c_sh, rep, rep, rep),
+            out_shardings=c_sh)
+        _sharded_cache_put(memo, fn)
+    return fn
 
 
 def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
@@ -536,13 +712,24 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
              max_seq: Optional[int] = None,
              extras: Optional[Dict[str, Any]] = None,
              sync_every: Optional[int] = None,
-             state: Optional[Dict[str, Any]] = None) -> GenerationResult:
+             state: Optional[Dict[str, Any]] = None,
+             mesh=None, shard_params: bool = True) -> GenerationResult:
     """Device-resident generation: run spec steps until every sequence has
     ≥ n_tokens, committing outputs into on-device buffers inside a jitted
     while-loop.  The host is touched once per generation — or once every
     ``sync_every`` steps when set (streaming), at which point partial
-    buffers could be flushed to a consumer.  Pass a prebuilt ``state`` to
-    reuse an existing prefill (it is consumed functionally)."""
+    buffers could be flushed to a consumer.
+
+    Pass a prebuilt ``state`` to reuse an existing prefill, or the
+    ``.state`` of a previous GenerationResult to continue a generation —
+    chained calls are bit-identical to one long call (slot-0 metadata comes
+    from the state's ``last_ctx``/``last_u``/``last_msk``, never from the
+    prompt tail).
+
+    Pass ``mesh`` to run the loop sharded: engine state and output buffers
+    batch-shard over the dp axes, params shard by the production rules
+    (``shard_params=False`` replicates them — e.g. tiny-model parity runs
+    on meshes whose axes don't divide the weight dims)."""
     if sync_every is not None and sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {sync_every}")
     B, S0 = prompts.shape
@@ -556,27 +743,40 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
 
     K1 = scfg.K + 1
     cap = n_tokens + K1 + 1
-    # slot 0 = the first token sampled at prefill (from target, ζ^T, ctx =
-    # prompt tail); the extra trailing column receives clipped writes.
-    c = scfg.ctx_window
-    w0 = prompts[:, -c:]
-    if w0.shape[1] < c:
-        w0 = jnp.pad(w0, ((0, 0), (c - w0.shape[1], 0)))
-    ch0 = prf.context_hash(w0)
+    # slot 0 = the pending committed-but-unconsumed token (the prefill
+    # sample on a fresh state, the previous call's final token on resume);
+    # its metadata lives in the state.  The extra trailing column receives
+    # clipped writes.
     carry = {
         "state": state,
         "toks": jnp.zeros((B, cap + 1), jnp.int32)
                    .at[:, 0].set(state["last"]),
-        "fd": jnp.zeros((B, cap + 1), jnp.int8).at[:, 0].set(1),
-        "us": jnp.zeros((B, cap + 1), jnp.float32).at[:, 0].set(
-            jax.vmap(lambda ch: prf.accept_uniform(key, ch))(ch0)),
-        "chs": jnp.zeros((B, cap + 1), jnp.uint32).at[:, 0].set(ch0),
-        "msk": jnp.zeros((B, cap + 1), bool),
+        "fd": jnp.zeros((B, cap + 1), jnp.int8),   # slot 0 is never a draft
+        "us": jnp.zeros((B, cap + 1), jnp.float32)
+                 .at[:, 0].set(state["last_u"]),
+        "chs": jnp.zeros((B, cap + 1), jnp.uint32)
+                  .at[:, 0].set(state["last_ctx"]),
+        "msk": jnp.zeros((B, cap + 1), bool).at[:, 0].set(state["last_msk"]),
         "lens": jnp.ones((B,), jnp.int32),
         "total": jnp.zeros((), jnp.int32),
+        "acc_total": jnp.zeros((), jnp.int32),
         "n_steps": jnp.zeros((), jnp.int32),
     }
-    loop = _jitted_gen_loop(tcfg, dcfg, scfg)
+    if mesh is not None:
+        t_sh = (SHR.param_shardings(_abs_tree(t_params), mesh)
+                if shard_params else replicated_shardings(t_params, mesh))
+        d_sh = (SHR.param_shardings(_abs_tree(d_params), mesh)
+                if shard_params else replicated_shardings(d_params, mesh))
+        loop = _jitted_gen_loop(tcfg, dcfg, scfg, mesh,
+                                carry_abs=_abs_tree(carry),
+                                t_shardings=t_sh, d_shardings=d_sh)
+        t_params = jax.device_put(t_params, t_sh)
+        d_params = jax.device_put(d_params, d_sh)
+        carry = jax.device_put(carry, carry_shardings(_abs_tree(carry),
+                                                      mesh))
+        key = jax.device_put(key, NamedSharding(mesh, P()))
+    else:
+        loop = _jitted_gen_loop(tcfg, dcfg, scfg)
     if sync_every is None:
         carry = loop(t_params, d_params, carry, key,
                      jnp.int32(n_tokens), jnp.int32(max_steps))
@@ -589,7 +789,9 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
             if int(np.asarray(carry["lens"]).min()) >= n_tokens:
                 break
     n_steps = int(np.asarray(carry["n_steps"]))
-    aatps = int(np.asarray(carry["total"])) / max(n_steps * B, 1)
+    denom = max(n_steps * B, 1)
+    aatps = int(np.asarray(carry["acc_total"])) / denom
+    tps = int(np.asarray(carry["total"])) / denom
     return GenerationResult(
         tokens=np.asarray(carry["toks"])[:, :cap],
         lengths=np.asarray(carry["lens"]),
@@ -597,4 +799,5 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         u=np.asarray(carry["us"])[:, :cap],
         ctx_hashes=np.asarray(carry["chs"])[:, :cap],
         masked=np.asarray(carry["msk"])[:, :cap],
-        aatps=float(aatps), n_steps=n_steps)
+        aatps=float(aatps), tokens_per_step=float(tps), n_steps=n_steps,
+        state=carry["state"])

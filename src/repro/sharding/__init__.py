@@ -1,7 +1,10 @@
 """Sharding rules for the production mesh (see rules.py)."""
 from repro.sharding.rules import (  # noqa: F401
+    batch_leading_specs,
     batch_spec,
     cache_specs,
+    dp_axes,
+    engine_state_specs,
     logits_spec,
     opt_state_specs,
     param_shardings,

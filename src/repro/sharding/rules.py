@@ -167,6 +167,15 @@ def batch_axes(mesh: Mesh) -> Optional[Tuple[str, ...]]:
     return axes if axes else None
 
 
+def dp_axes(mesh: Mesh, global_batch: int) -> Optional[Tuple[str, ...]]:
+    """The dp axes usable for ``global_batch`` — drops "pod" first, then
+    "data", until the batch divides.  None when nothing fits."""
+    axes = list(batch_axes(mesh) or ())
+    while axes and global_batch % _axes_size(tuple(axes), mesh) != 0:
+        axes.pop(0)
+    return tuple(axes) if axes else None
+
+
 def _ambient_mesh():
     """The mesh of the enclosing ``with mesh:`` context (legacy pjit env),
     falling back to the new-style abstract mesh.  None when unset."""
@@ -248,13 +257,17 @@ def constrain_batch(x, *, extra: Tuple[Any, ...] = ()) -> Any:
     return jax.lax.with_sharding_constraint(x, P(bspec, *cleaned))
 
 
+def _dp_bspec(mesh: Mesh, global_batch: int):
+    axes = dp_axes(mesh, global_batch)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
 def batch_spec(batch_abstract, mesh: Mesh, *, global_batch: int) -> Any:
     """Shard the leading batch dim of every input over the dp axes (dropping
     axes until the batch divides — long_500k with batch=1 replicates)."""
-    axes = list(batch_axes(mesh) or ())
-    while axes and global_batch % _axes_size(tuple(axes), mesh) != 0:
-        axes.pop(0)   # drop "pod" first, then "data"
-    bspec = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+    bspec = _dp_bspec(mesh, global_batch)
 
     def one(leaf):
         return P(*((bspec,) + (None,) * (len(leaf.shape) - 1)))
@@ -264,10 +277,7 @@ def batch_spec(batch_abstract, mesh: Mesh, *, global_batch: int) -> Any:
 
 def logits_spec(mesh: Mesh, *, global_batch: int, ndim: int = 3,
                 vocab: Optional[int] = None) -> P:
-    axes = list(batch_axes(mesh) or ())
-    while axes and global_batch % _axes_size(tuple(axes), mesh) != 0:
-        axes.pop(0)
-    bspec = tuple(axes) if len(axes) > 1 else (axes[0] if axes else None)
+    bspec = _dp_bspec(mesh, global_batch)
     tp = "model" if "model" in mesh.axis_names else None
     if tp and vocab is not None and vocab % mesh.shape[tp] != 0:
         tp = None   # odd vocab (e.g. whisper's 51865) cannot split
@@ -301,9 +311,7 @@ _CACHE_RULES: Dict[str, Tuple[List[Optional[AxisCandidates]],
 def cache_specs(cache_abstract, mesh: Mesh, *, global_batch: int) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
     # dp axes usable for this batch size
-    dp = list(batch_axes(mesh) or ())
-    while dp and global_batch % _axes_size(tuple(dp), mesh) != 0:
-        dp.pop(0)
+    dp = list(dp_axes(mesh, global_batch) or ())
 
     def resolve(name, leaf):
         rule = _CACHE_RULES.get(name)
@@ -332,3 +340,44 @@ def cache_specs(cache_abstract, mesh: Mesh, *, global_batch: int) -> Any:
     specs = [resolve(_path_str(path).split("/")[-1], leaf)
              for path, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# Speculative-engine state (serve/engine.py)
+# ---------------------------------------------------------------------------
+
+# engine-state keys that are NOT batch-leading (replicated scalar step state)
+_ENGINE_SCALAR_KEYS = ("step_idx",)
+
+
+def engine_state_specs(state_abstract, mesh: Mesh, *,
+                       global_batch: int) -> Dict[str, Any]:
+    """PartitionSpecs for the speculative-engine state dict.
+
+    Model caches go through the cache rules (batch over dp, kv-heads /
+    states over "model"); every other entry is a batch-leading per-sequence
+    vector (window/last/history/…) sharded over the dp axes; scalar step
+    state replicates.  Generic over added keys, so new per-sequence fields
+    shard without a rules change."""
+    out: Dict[str, Any] = {}
+    for k, v in state_abstract.items():
+        if k in ("t_cache", "d_cache"):
+            out[k] = cache_specs(v, mesh, global_batch=global_batch)
+        elif k in _ENGINE_SCALAR_KEYS or not getattr(v, "shape", ()):
+            out[k] = P()
+        else:
+            out[k] = batch_spec({k: v}, mesh, global_batch=global_batch)[k]
+    return out
+
+
+def batch_leading_specs(tree_abstract, mesh: Mesh, *,
+                        global_batch: int) -> Any:
+    """Specs for a pytree of per-sequence buffers: leading dim over dp when
+    it divides, scalars (0-d leaves) replicated.  Used for the engine's
+    generation-loop carry (output buffers + counters)."""
+    def one(leaf):
+        if not leaf.shape:
+            return P()
+        return batch_spec({"x": leaf}, mesh, global_batch=global_batch)["x"]
+
+    return jax.tree.map(one, tree_abstract)

@@ -5,6 +5,13 @@ import jax.numpy as jnp
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: heavyweight arch/perf tests — excluded by `make ci-quick` "
+        "(-m 'not slow'), run in the nightly full suite")
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(20260711)

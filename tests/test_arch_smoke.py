@@ -30,6 +30,7 @@ def test_forward_shapes_no_nans(arch):
     assert not bool(jnp.isnan(aux).any())
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_one_train_step(arch):
     cfg = get_smoke_config(arch)
@@ -48,6 +49,7 @@ def test_one_train_step(arch):
     assert delta > 0
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
 def test_prefill_decode_matches_forward(arch):
     """decode_step after prefill must reproduce the full-sequence logits —
@@ -65,6 +67,7 @@ def test_prefill_decode_matches_forward(arch):
         rtol=2e-2, atol=2e-3)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b", "zamba2-1.2b",
                                   "olmoe-1b-7b"])
 def test_microbatched_train_step_matches(arch):

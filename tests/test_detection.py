@@ -40,14 +40,15 @@ def test_synthid_recover_matches_sample():
 
 
 def _mk_record(n, bias_draft, src, seed=0, dup_frac=0.0):
-    """Synthetic record: y_draft biased toward 1 at src==0 positions."""
+    """Synthetic record: src follows StepOutput.from_draft semantics
+    (1 = draft), so y_draft is biased toward 1 at src==1 positions."""
     rng = np.random.default_rng(seed)
     y_d = rng.uniform(size=n).astype(np.float32)
     y_t = rng.uniform(size=n).astype(np.float32)
     if bias_draft:
-        y_d[src == 0] = 1.0 - (1.0 - y_d[src == 0]) * 0.55
-        y_t[src == 1] = 1.0 - (1.0 - y_t[src == 1]) * 0.55
-    u = np.where(src == 0, rng.uniform(0, 0.5, n),
+        y_d[src == 1] = 1.0 - (1.0 - y_d[src == 1]) * 0.55
+        y_t[src == 0] = 1.0 - (1.0 - y_t[src == 0]) * 0.55
+    u = np.where(src == 1, rng.uniform(0, 0.5, n),
                  rng.uniform(0.5, 1, n)).astype(np.float32)
     ctx = rng.integers(0, 2**32, n, dtype=np.uint32)
     if dup_frac:
@@ -81,7 +82,7 @@ def test_selector_orderings_on_synthetic_records():
     rng = np.random.default_rng(4)
     wm, null = [], []
     for i in range(40):
-        src = (rng.uniform(size=n) > 0.6).astype(int)
+        src = (rng.uniform(size=n) < 0.6).astype(int)   # 1 = draft, ~60%
         wm.append(_mk_record(n, True, src, seed=i))
         null.append(_mk_record(n, False, src, seed=1000 + i))
     s_tau_wm = gumbel_detect.scores_tau(wm, 0.5, n)

@@ -45,13 +45,17 @@ def test_determinism(dense_pair):
 
 
 def test_aatps_bounds(dense_pair):
+    """aatps counts ACCEPTED draft tokens only (in [0, K]); tokens_per_step
+    additionally counts the per-step extra token (in [1, K+1])."""
     tcfg, dcfg, tp, dp = dense_pair
     for wm in ("gumbel", "none"):
         scfg = E.SpecConfig(K=3, watermark=wm, accept="pseudorandom"
                             if wm != "none" else "standard")
         r = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=16,
                        key=KEY)
-        assert 1.0 <= r.aatps <= 4.0
+        assert 0.0 <= r.aatps <= 3.0
+        assert 1.0 <= r.tokens_per_step <= 4.0
+        assert r.tokens_per_step == pytest.approx(r.aatps + 1.0)
 
 
 @pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b", "zamba2-1.2b"])
@@ -91,6 +95,64 @@ def test_target_state_commit_consistency(arch, dense_pair):
                     rtol=2e-2, atol=2e-3, err_msg=f"{arch}/{k}")
 
 
+def test_provenance_flag_matches_step_output(dense_pair):
+    """Regression (inverted-flag bug): the committed ``from_draft`` buffer
+    and the detection records' ``src`` must carry StepOutput.from_draft
+    semantics — 1 = accepted draft token, 0 = target/residual/bonus."""
+    from repro.core.detection import pipeline
+    tcfg, dcfg, tp, dp = dense_pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    state = E.init_state(tp, dp, tcfg, dcfg, scfg, PROMPTS, 128, KEY)
+    step = jax.jit(E.make_spec_step(tcfg, dcfg, scfg))
+    _, out = step(tp, dp, state, KEY)
+    res = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=12,
+                     key=KEY)
+    recs = pipeline.records_from_generation(res, E.make_decoder(scfg), KEY,
+                                            tcfg.vocab)
+    for b in range(PROMPTS.shape[0]):
+        # slot 0 is the prefill token — sampled from the target
+        assert recs[b].src[0] == 0
+        # generate's first loop step is bit-identical to the manual step:
+        # slots 1..out_len carry its from_draft flags verbatim
+        n1 = int(out.out_len[b])
+        np.testing.assert_array_equal(
+            recs[b].src[1:1 + n1],
+            np.asarray(out.from_draft[b, :n1]).astype(np.int8))
+        # 1s are exactly the accepted draft prefix (never the extra token)
+        assert recs[b].src[1:1 + n1].sum() == int(out.n_accepted[b])
+        assert recs[b].src[n1] == 0
+
+
+def test_resume_chained_equals_long(dense_pair):
+    """Two chained generate(state=...) calls must be bit-identical to one
+    long generate — tokens, coins, context hashes, provenance and masked
+    flags, including the boundary slot (carried in last_ctx/last_u/
+    last_msk, not recomputed from the prompt tail)."""
+    tcfg, dcfg, tp, dp = dense_pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    rl = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=24, key=KEY)
+    r1 = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=12, key=KEY)
+    r2 = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=12, key=KEY,
+                    state=r1.state)
+    for b in range(PROMPTS.shape[0]):
+        m1, m2, ml = int(r1.lengths[b]), int(r2.lengths[b]), \
+            int(rl.lengths[b])
+        # r2's slot 0 re-emits r1's final token with its original metadata
+        assert r2.tokens[b, 0] == r1.tokens[b, m1 - 1]
+        assert r2.u[b, 0] == r1.u[b, m1 - 1]
+        assert r2.ctx_hashes[b, 0] == r1.ctx_hashes[b, m1 - 1]
+        assert r2.from_draft[b, 0] == 0
+        for name in ("tokens", "u", "ctx_hashes", "from_draft", "masked"):
+            chained = np.concatenate([getattr(r1, name)[b, :m1],
+                                      getattr(r2, name)[b, 1:m2]])
+            long = getattr(rl, name)[b, :ml]
+            n = min(len(chained), len(long))
+            assert n >= 23
+            np.testing.assert_array_equal(chained[:n], long[:n],
+                                          err_msg=f"seq {b} {name}")
+
+
+@pytest.mark.slow
 def test_spec_engine_is_lossless_in_distribution():
     """Unbiasedness of the FULL speculative path (draft + pseudorandom
     accept + residual/bonus): the empirical marginal of the first

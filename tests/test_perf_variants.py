@@ -11,6 +11,7 @@ from repro.configs import get_smoke_config
 from repro.models import model as M
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("S", [31, 32, 48])
 @pytest.mark.parametrize("chunk", [8, 16])
 def test_chunked_ssd_scan_matches_stepwise(S, chunk):
@@ -63,4 +64,5 @@ def test_opt_variants_in_spec_engine():
     res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=10,
                      key=jax.random.key(3))
     assert res.lengths.min() >= 10
-    assert 1.0 <= res.aatps <= 3.0
+    assert 0.0 <= res.aatps <= 2.0
+    assert 1.0 <= res.tokens_per_step <= 3.0
