@@ -6,6 +6,13 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
+# Coverage is a dev extra (requirements-dev.txt): when pytest-cov is
+# installed, ci-quick reports coverage of the serving subsystem and
+# enforces a floor on src/repro/serve (scheduler + engine); without it the
+# same tests run uninstrumented (e.g. the baked-in container toolchain).
+COV := $(shell python -c "import pytest_cov" 2>/dev/null && echo \
+	--cov=src/repro/serve --cov-report=term-missing --cov-fail-under=80)
+
 .PHONY: test test-quick bench-quick bench ci ci-quick
 
 test:
@@ -20,6 +27,10 @@ bench-quick:
 bench:
 	python -m benchmarks.run --fast
 
+# nightly gate: full tier-1 suite (incl. @slow — scheduler stress, arch/
+# perf heavies) + perf smoke artifacts
 ci: test bench-quick
 
-ci-quick: test-quick
+# push/PR gate: quick tests + serving-subsystem coverage floor
+ci-quick:
+	python -m pytest -x -q -m "not slow" $(COV)

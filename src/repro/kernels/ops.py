@@ -46,20 +46,21 @@ def spec_verify(p, q, draft_tokens, u, resid_seeds, *,
 
 
 def _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds, plain_seeds,
-                          seen, *, interpret: bool | None):
+                          seen, live, *, interpret: bool | None):
     """Single-shard body of ``spec_verify_wm`` (grid spans the local batch)."""
     if interpret is None and _interpret_default():
         from repro.kernels import ref as _ref
         return _ref.spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds,
-                                       plain_seeds, seen)
+                                       plain_seeds, seen, live)
     interpret = False if interpret is None else interpret
     return spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds,
-                                 plain_seeds, seen, interpret=interpret)
+                                 plain_seeds, seen, live,
+                                 interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret", "mesh", "batch_axes"))
-def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, *,
-                   interpret: bool | None = None, mesh=None,
+def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
+                   live=None, *, interpret: bool | None = None, mesh=None,
                    batch_axes: tuple | None = None):
     """Fused watermarked verification tail.  On TPU this stages the Mosaic
     kernel; on CPU the default is the *bit-exact jnp mirror* of the kernel
@@ -68,6 +69,11 @@ def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, *,
     than the XLA-compiled mirror.  Pass ``interpret=True`` to force the
     interpreter (kernel validation).
 
+    ``live`` (optional, (B,) bool/int) is the continuous-batching slot
+    mask: rows with live == 0 (drained serving slots) skip the whole
+    verification/race body (``pl.when``-predicated in the kernel) and
+    return all-zero outputs.  None = every row live.
+
     With ``mesh`` + ``batch_axes`` the call runs under ``shard_map`` over
     the batch dim: every input/output is batch-sharded on ``batch_axes``
     and the kernel's ``grid=(B,)`` spans the *per-shard local* batch — no
@@ -75,12 +81,15 @@ def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, *,
     batch must divide the axes' size."""
     if mesh is None or not batch_axes:
         return _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds,
-                                     plain_seeds, seen,
+                                     plain_seeds, seen, live,
                                      interpret=interpret)
+    import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+    if live is None:
+        live = jnp.ones((p.shape[0],), jnp.int32)
     spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
     fn = partial(_spec_verify_wm_local, interpret=interpret)
-    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 7,
+    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 8,
                      out_specs=(spec,) * 4, check_rep=False)(
-        p, q, draft_tokens, u, wm_seeds, plain_seeds, seen)
+        p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, live)

@@ -72,9 +72,12 @@ def spec_verify_ref(p, q, draft_tokens, u, resid_seeds):
     return n_acc, prefix, rtok, ru
 
 
-def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen):
+def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
+                       live=None):
     """Mirror of spec_verify_wm_kernel (full watermarked Alg. 1 tail);
-    see its docstring.  p: (B, K+1, V), q: (B, K, V)."""
+    see its docstring.  p: (B, K+1, V), q: (B, K, V).  ``live`` (optional,
+    (B,)): rows with live == 0 return the kernel's zero-initialized outputs
+    (drained continuous-batching slots)."""
     B, K1, V = p.shape
     K = K1 - 1
     p = p.astype(jnp.float32)
@@ -104,4 +107,10 @@ def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen):
         return tok, uv[tok]
 
     etok, eu = jax.vmap(race)(r, seed_s)
+    if live is not None:
+        lv = live.astype(bool)
+        n_acc = jnp.where(lv, n_acc, 0)
+        prefix = jnp.where(lv[:, None], prefix, 0)
+        etok = jnp.where(lv, etok, 0)
+        eu = jnp.where(lv, eu, 0.0)
     return n_acc, prefix, etok, eu

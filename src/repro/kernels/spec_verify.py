@@ -117,51 +117,63 @@ def spec_verify_kernel(p, q, draft_tokens, u, resid_seeds, *,
 
 
 def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, seen_ref,
-               nacc_ref, acc_ref, etok_ref, eu_ref, *, K: int, vocab: int):
-    p = p_ref[0].astype(jnp.float32)        # (K+1, Vp): slot K = bonus dist
-    q = q_ref[0].astype(jnp.float32)        # (K, Vp)
-    toks = tok_ref[0]                       # (K,)
-    u = u_ref[0].astype(jnp.float32)        # (K,) acceptance coins
-    wms = wms_ref[0].astype(jnp.uint32)     # (K+1,) zeta^T stream seeds
-    pls = pls_ref[0].astype(jnp.uint32)     # (K+1,) non-watermark seeds
-    seen = seen_ref[0]                      # (K+1,) int32 repeated-ctx mask
-    kv, vp = q.shape
-    w2 = jax.lax.broadcasted_iota(jnp.int32, (kv, vp), 1)
-    onehot = (w2 == toks[:, None]).astype(jnp.float32)
-    p_tok = jnp.sum(p[:K] * onehot, axis=-1)  # (K,)
-    q_tok = jnp.sum(q * onehot, axis=-1)
-    a = jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-30))
-    prefix = jnp.cumprod((u < a).astype(jnp.int32))
-    n_acc = jnp.sum(prefix)
-    acc_ref[0] = prefix
-    nacc_ref[0] = n_acc.astype(jnp.int32)[None]
+               live_ref, nacc_ref, acc_ref, etok_ref, eu_ref, *, K: int,
+               vocab: int):
+    # Zero-init so non-live (drained continuous-batching slot) rows emit
+    # defined outputs; the whole verification/race body is then predicated
+    # off for them — a drained row costs no gather/race work on TPU.
+    nacc_ref[0] = jnp.zeros((1,), jnp.int32)
+    acc_ref[0] = jnp.zeros((K,), jnp.int32)
+    etok_ref[0] = jnp.zeros((1,), jnp.int32)
+    eu_ref[0] = jnp.zeros((1,), jnp.float32)
 
-    # the single emitted extra token: slot n_acc in [0, K].  For n_acc < K
-    # the race runs over (p − q)_+ (first-rejection residual); for n_acc == K
-    # the q mask selects nothing, so r == p_K (bonus).  The Gumbel-max race
-    # is scale-invariant, so the residual needs no normalization pass.
-    slot = n_acc
-    rows_p = jax.lax.broadcasted_iota(jnp.int32, (K + 1, 1), 0)
-    p_s = jnp.sum(p * (rows_p == slot).astype(jnp.float32),
-                  axis=0, keepdims=True)           # (1, Vp)
-    rows_q = jax.lax.broadcasted_iota(jnp.int32, (kv, 1), 0)
-    q_s = jnp.sum(q * (rows_q == slot).astype(jnp.float32),
-                  axis=0, keepdims=True)
-    eff = jnp.where(seen != 0, pls, wms)           # (K+1,) stream switch
-    seed_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, eff, jnp.uint32(0)))
-    r = jnp.maximum(p_s - q_s, 0.0)
-    wv = jax.lax.broadcasted_iota(jnp.uint32, (1, vp), 1)
-    uv = _uniform(seed_s, wv)
-    score = jnp.log(uv) / jnp.maximum(r, 1e-30)
-    score = jnp.where((r > 0) & (wv < vocab), score, -jnp.inf)
-    etok = jnp.argmax(score).astype(jnp.int32)     # flat over (1, Vp)
-    etok_ref[0] = etok[None]
-    eu_ref[0] = jnp.sum(uv * (wv == etok.astype(jnp.uint32))
-                        .astype(jnp.float32))[None]
+    @pl.when(live_ref[0, 0] != 0)
+    def _():
+        p = p_ref[0].astype(jnp.float32)    # (K+1, Vp): slot K = bonus dist
+        q = q_ref[0].astype(jnp.float32)    # (K, Vp)
+        toks = tok_ref[0]                   # (K,)
+        u = u_ref[0].astype(jnp.float32)    # (K,) acceptance coins
+        wms = wms_ref[0].astype(jnp.uint32)  # (K+1,) zeta^T stream seeds
+        pls = pls_ref[0].astype(jnp.uint32)  # (K+1,) non-watermark seeds
+        seen = seen_ref[0]                  # (K+1,) int32 repeated-ctx mask
+        kv, vp = q.shape
+        w2 = jax.lax.broadcasted_iota(jnp.int32, (kv, vp), 1)
+        onehot = (w2 == toks[:, None]).astype(jnp.float32)
+        p_tok = jnp.sum(p[:K] * onehot, axis=-1)  # (K,)
+        q_tok = jnp.sum(q * onehot, axis=-1)
+        a = jnp.minimum(1.0, p_tok / jnp.maximum(q_tok, 1e-30))
+        prefix = jnp.cumprod((u < a).astype(jnp.int32))
+        n_acc = jnp.sum(prefix)
+        acc_ref[0] = prefix
+        nacc_ref[0] = n_acc.astype(jnp.int32)[None]
+
+        # the single emitted extra token: slot n_acc in [0, K].  For
+        # n_acc < K the race runs over (p − q)_+ (first-rejection residual);
+        # for n_acc == K the q mask selects nothing, so r == p_K (bonus).
+        # The Gumbel-max race is scale-invariant, so the residual needs no
+        # normalization pass.
+        slot = n_acc
+        rows_p = jax.lax.broadcasted_iota(jnp.int32, (K + 1, 1), 0)
+        p_s = jnp.sum(p * (rows_p == slot).astype(jnp.float32),
+                      axis=0, keepdims=True)           # (1, Vp)
+        rows_q = jax.lax.broadcasted_iota(jnp.int32, (kv, 1), 0)
+        q_s = jnp.sum(q * (rows_q == slot).astype(jnp.float32),
+                      axis=0, keepdims=True)
+        eff = jnp.where(seen != 0, pls, wms)           # (K+1,) stream switch
+        seed_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, eff, jnp.uint32(0)))
+        r = jnp.maximum(p_s - q_s, 0.0)
+        wv = jax.lax.broadcasted_iota(jnp.uint32, (1, vp), 1)
+        uv = _uniform(seed_s, wv)
+        score = jnp.log(uv) / jnp.maximum(r, 1e-30)
+        score = jnp.where((r > 0) & (wv < vocab), score, -jnp.inf)
+        etok = jnp.argmax(score).astype(jnp.int32)     # flat over (1, Vp)
+        etok_ref[0] = etok[None]
+        eu_ref[0] = jnp.sum(uv * (wv == etok.astype(jnp.uint32))
+                            .astype(jnp.float32))[None]
 
 
 def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
-                          seen, *, interpret: bool = False):
+                          seen, live=None, *, interpret: bool = False):
     """Fused watermarked verification tail of Alg. 1 (accept/reject +
     residual-or-bonus sampling) — one VMEM pass per sequence row.
 
@@ -171,6 +183,11 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
     counter-PRF seeds for the ζ^T and non-watermark streams; seen: (B, K+1)
     repeated-context mask (nonzero -> fall back to the plain stream).
 
+    ``live`` (optional, (B,) bool/int): slot mask for continuous batching —
+    rows with live == 0 (drained serving slots) skip the whole verification
+    body under ``pl.when`` and return all-zero outputs.  None = all rows
+    live.
+
     Returns (n_acc (B,), accepted (B, K) int32, extra_tok (B,),
     extra_u (B,)) where extra_tok is the emitted slot-n_acc token (residual
     on first rejection, bonus when all accepted) and extra_u its PRF
@@ -178,6 +195,8 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
     B, K1, V = p.shape
     K = K1 - 1
     assert q.shape == (B, K, V), (p.shape, q.shape)
+    if live is None:
+        live = jnp.ones((B,), jnp.int32)
     vp = -(-V // 128) * 128
     pp = jnp.zeros((B, K1, vp), p.dtype).at[:, :, :V].set(p)
     qp = jnp.zeros((B, K, vp), q.dtype).at[:, :, :V].set(q)
@@ -192,6 +211,7 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
@@ -208,6 +228,6 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
         interpret=interpret,
     )(pp, qp, draft_tokens.astype(jnp.int32), u.astype(jnp.float32),
       wm_seeds.astype(jnp.uint32), plain_seeds.astype(jnp.uint32),
-      seen.astype(jnp.int32))
+      seen.astype(jnp.int32), live.astype(jnp.int32).reshape(B, 1))
     n_acc, acc, etok, eu = outs
     return n_acc[:, 0], acc, etok[:, 0], eu[:, 0]

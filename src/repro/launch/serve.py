@@ -11,10 +11,20 @@ host mesh (state/buffers batch-sharded, params by the production rules).
 the sharded path validates on one machine:
 
     PYTHONPATH=src python -m repro.launch.serve --devices 8 --mesh 8x1
+
+Continuous batching: ``--requests FILE.jsonl`` replays a request log
+through the scheduler (``engine.serve_requests``) instead of one fixed
+batch — each line is ``{"tokens": [...], "n_tokens": N}`` (or ``{"text":
+"...", ...}``, byte-encoded with the synthetic vocab); prompts are
+admitted FIFO into ``--batch`` live slots at sync points:
+
+    PYTHONPATH=src python -m repro.launch.serve --requests reqs.jsonl \
+        --batch 4 --sync-every 4 [--eos-id 10]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
 
 
@@ -39,6 +49,19 @@ def main():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N fake CPU devices before jax init "
                          "(single-machine validation of --mesh)")
+    ap.add_argument("--requests", default="",
+                    help="continuous-batching replay: JSONL file of "
+                         '{"tokens": [...], "n_tokens": N} requests '
+                         "served FIFO through --batch live slots (each "
+                         "distinct prompt length compiles its own "
+                         "prefill — bucket lengths in the file for "
+                         "length-diverse traffic)")
+    ap.add_argument("--sync-every", type=int, default=4,
+                    help="scheduler sync-point interval (steps between "
+                         "admission/flush opportunities)")
+    ap.add_argument("--eos-id", type=int, default=-1,
+                    help="token id that terminates a slot early "
+                         "(-1 = disabled)")
     args = ap.parse_args()
 
     if args.devices:
@@ -95,6 +118,39 @@ def main():
         data, model = (int(x) for x in args.mesh.split("x"))
         mesh = make_host_mesh(data=data, model=model)
         print(f"serving sharded on {mesh}")
+
+    if args.requests:
+        reqs = []
+        with open(args.requests) as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                obj = json.loads(line)
+                toks = (obj["tokens"] if "tokens" in obj else
+                        synthetic.encode(obj["text"].encode()).tolist())
+                reqs.append({"prompt": np.asarray(toks, np.int32),
+                             "n_tokens": int(obj.get("n_tokens",
+                                                     args.tokens))})
+        eos = None if args.eos_id < 0 else args.eos_id
+        results = E.serve_requests(
+            t_params, d_params, tcfg, dcfg, scfg, reqs, batch=args.batch,
+            key=key, eos_id=eos, sync_every=args.sync_every, mesh=mesh)
+        tot = sum(r.length for r in results)
+        alive = sum(r.alive_steps for r in results)
+        acc = sum(r.n_accepted for r in results)
+        print(f"arch={args.arch} watermark={args.watermark} "
+              f"continuous batching: {len(results)} requests over "
+              f"{args.batch} slots")
+        print(f"AATPS={acc / max(alive, 1):.3f} tokens={tot} "
+              f"alive-slot-steps={alive}")
+        for r in results[:8]:
+            tail = " eos" if r.eos else ""
+            print(f"  req {r.uid}: {r.length} tokens{tail} | "
+                  + synthetic.decode_bytes(r.tokens)[:40].decode(
+                      "latin1"))
+        return
+
     res = E.generate(t_params, d_params, tcfg, dcfg, scfg, prompts,
                      n_tokens=args.tokens, key=key, extras=extras,
                      mesh=mesh)

@@ -43,6 +43,17 @@ where the previous call stopped — slot-0 metadata (context hash, coin,
 masked flag) is carried in the state (``last_ctx``/``last_u``/
 ``last_msk``), never recomputed from the prompt tail.
 
+**Per-slot stopping / continuous batching**: the loop's stopping condition
+is per-sequence — ``n_tokens`` may be a per-slot target vector and
+``eos_id`` terminates a slot the moment it emits that token.  Finished
+slots *freeze* inside the jitted loop (masked commits, per-slot state
+carried unchanged, ``live``-masked rows in the fused verification kernel)
+and stop counting toward the AATPS denominators, while the others keep
+stepping.  ``serve_requests`` (backed by ``serve.scheduler``) builds
+multi-request serving on top: queued prompts are admitted into drained
+slots at sync points, with every request's stream bit-identical to a solo
+``generate`` run (slot isolation — tests/test_scheduler.py).
+
 Repeated-context masking (Hu et al. 2024): a per-sequence history of used
 context hashes; a position whose context was already used samples from the
 *raw* distribution with non-watermark randomness, preserving sequence-level
@@ -308,9 +319,21 @@ def _rollback(cache, checkpoints, pos0, out_len):
 
 def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                    mesh=None) -> Callable:
-    """Build the jittable spec_step(t_params, d_params, state, key)
-    -> (state, StepOutput).  ``key`` is the watermark key (static stream
-    derivation) — in ``standard`` accept mode it also feeds fresh coins.
+    """Build the jittable spec_step(t_params, d_params, state, key,
+    live=None, eos_id=None) -> (state, StepOutput).  ``key`` is the
+    watermark key (static stream derivation) — in ``standard`` accept mode
+    it also feeds fresh coins.  ``eos_id`` (optional traced scalar; -1
+    disables) truncates the emission — and every piece of committed state —
+    at the first EOS token, so a stopped slot's state ends exactly at its
+    delivered stream.
+
+    ``live`` (optional, (B,) bool) is the continuous-batching slot mask:
+    slots with live == False (drained / free serving slots) are *frozen* —
+    the fused verification tail skips their rows, and their per-slot state
+    (window / last / history / cache positions / recurrent states) is
+    carried through unchanged, so a drained slot's stream can resume or be
+    re-admitted bit-exactly while live slots keep stepping.  Live slots
+    compute exactly what they would with live=None (slot isolation).
 
     With ``mesh`` the fused verification tail runs its per-row grid on the
     local batch shard via ``shard_map`` over the mesh's dp axes (the rest
@@ -337,7 +360,7 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
             ctx_h)
         return jax.vmap(_race_sample)(q_full, jnp.where(seen, pl, wm))
 
-    def step(t_params, d_params, state, key):
+    def step(t_params, d_params, state, key, live=None, eos_id=None):
         t_cache, d_cache = state["t_cache"], state["d_cache"]
         window, last = state["window"], state["last"]
         hist, hist_n = state["hist"], state["hist_n"]
@@ -410,9 +433,11 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                 ctx_bonus)
             plain_seeds = jnp.concatenate([pl_r, pl_b[:, None]], axis=1)
             axes = SHR.dp_axes(mesh, B) if mesh is not None else None
+            live_i = None if live is None else live.astype(jnp.int32)
             n_acc, prefix_i, extra, _ = KOPS.spec_verify_wm(
                 p_fulls, q_fulls, draft_toks, u, wm_seeds, plain_seeds,
-                all_seen, mesh=mesh if axes else None, batch_axes=axes)
+                all_seen, live_i, mesh=mesh if axes else None,
+                batch_axes=axes)
             prefix = prefix_i.astype(bool)
         else:
             # ---- 4. jnp tail (synthid tournament / reference path) ---------
@@ -445,6 +470,22 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         out = out.at[:, :K].set(jnp.where(prefix, draft_toks, 0))
         out = jax.vmap(lambda o, n, e: o.at[n].set(e))(out, n_acc, extra)
         out_len = n_acc + 1
+        if eos_id is not None:
+            # EOS cut *inside the step*, before the commit: truncate the
+            # emission at the first EOS so every piece of committed state
+            # (window, last + its metadata, history, cache positions,
+            # recurrent rollback) ends exactly at the EOS token — a
+            # resumed or re-admitted slot then continues from precisely
+            # the delivered stream, never from dropped post-EOS tokens.
+            sidx = jnp.arange(K + 1)[None, :]
+            is_eos = (out == eos_id) & (sidx < out_len[:, None])
+            first = jnp.where(is_eos.any(axis=1),
+                              jnp.argmax(is_eos, axis=1), K + 1)
+            out_len = jnp.minimum(out_len, (first + 1).astype(jnp.int32))
+            # accepted AND emitted (the drafts dropped by the cut were
+            # verified but never delivered)
+            n_acc = jnp.minimum(n_acc, out_len)
+            out = jnp.where(sidx < out_len[:, None], out, 0)
         from_draft = jnp.arange(K + 1)[None, :] < n_acc[:, None]
 
         # ---- 6. commit -------------------------------------------------------
@@ -498,6 +539,34 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                          n_committed=state["n_committed"] + out_len,
                          hist=hist, hist_n=hist_n,
                          step_idx=state["step_idx"] + 1)
+        if live is not None:
+            # Freeze non-live (drained/free) slots: their per-slot state rows
+            # revert to the pre-step values so a drained slot can resume or
+            # be re-admitted bit-exactly.  KV cache rows need no select —
+            # a frozen slot's position does not advance, so the garbage this
+            # step wrote beyond ``pos`` is overwritten before it is ever
+            # attended (attention is position-gated); recurrent states have
+            # no position gate, so they do revert.
+            dead = ~live
+
+            def keep0(new, old):      # batch-leading (engine vectors)
+                m = dead.reshape((-1,) + (1,) * (new.ndim - 1))
+                return jnp.where(m, old, new)
+
+            def keep1(new, old):      # (L, B, ...) cache entries
+                m = dead.reshape((1, -1) + (1,) * (new.ndim - 2))
+                return jnp.where(m, old, new)
+
+            for k in ("window", "last", "last_ctx", "last_u", "last_msk",
+                      "n_committed", "hist", "hist_n"):
+                new_state[k] = keep0(new_state[k], state[k])
+            for cn in ("t_cache", "d_cache"):
+                cache_new = dict(new_state[cn])
+                cache_new["pos"] = keep0(cache_new["pos"], state[cn]["pos"])
+                for rk in RECURRENT_KEYS:
+                    if rk in cache_new:
+                        cache_new[rk] = keep1(cache_new[rk], state[cn][rk])
+                new_state[cn] = cache_new
         return new_state, StepOutput(
             out_tokens=out, out_len=out_len, n_accepted=n_acc,
             from_draft=from_draft, u=u, ctx_hashes=all_hashes,
@@ -608,17 +677,32 @@ class GenerationResult:
     u: np.ndarray               # (B, N) coins aligned to emitted slots
     ctx_hashes: np.ndarray      # (B, N) uint32
     masked: np.ndarray          # (B, N) bool
-    aatps: float                # average ACCEPTED (draft) tokens per step
-    tokens_per_step: float      # emitted tokens per step (= aatps + 1)
+    aatps: float                # average ACCEPTED (draft) tokens per
+    #                             *alive* slot-step (drained slots excluded)
+    tokens_per_step: float      # delivered tokens per alive slot-step
+    #                             (<= aatps + 1; equality without EOS cuts)
     n_steps: int
     state: Optional[Dict[str, Any]] = None   # final engine state (resume)
+    eos: Optional[np.ndarray] = None         # (B,) bool — stopped on EOS
 
 
 def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                    mesh=None) -> Callable:
-    """Device-resident multi-step loop: while any sequence is short (and the
-    step budget remains), run spec_step and scatter-commit its outputs into
-    the preallocated output buffers — no host sync, no per-sequence loop.
+    """Device-resident multi-step loop: while any slot is unfinished (and
+    the step budget remains), run spec_step and scatter-commit its outputs
+    into the preallocated output buffers — no host sync, no per-sequence
+    loop.
+
+    Stopping is **per-slot**: each slot b runs until ``lens[b] >=
+    n_tokens[b]`` (a per-slot target vector) or until it emits ``eos_id``
+    (-1 disables EOS).  A finished slot flips its ``done`` flag and is
+    excluded from every subsequent step — its commits are masked, its
+    engine state is frozen (``live`` mask into spec_step, so the fused
+    verification kernel skips the row), and it stops counting toward the
+    AATPS / tokens-per-step denominators (``alive_steps``).  This is the
+    sync-point substrate of the continuous-batching scheduler: at loop
+    exit, drained slots can be flushed and re-admitted without perturbing
+    the surviving slots' streams.
 
     Each buffer has one trailing trash column; a slot's write position is
     ``lens[b] + s`` when it is a valid emission that still fits, else the
@@ -626,19 +710,25 @@ def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
     step = make_spec_step(tcfg, dcfg, scfg, mesh=mesh)
     K1 = scfg.K + 1
 
-    def loop(t_params, d_params, carry, key, n_tokens, step_limit):
+    def loop(t_params, d_params, carry, key, n_tokens, eos_id, step_limit):
         cap = carry["toks"].shape[1] - 1   # last column is trash
 
         def cond(c):
-            return ((c["lens"].min() < n_tokens)
-                    & (c["n_steps"] < step_limit))
+            return (~c["done"]).any() & (c["n_steps"] < step_limit)
 
         def body(c):
-            state, outp = step(t_params, d_params, c["state"], key)
+            live = ~c["done"]
+            # the step truncates its own emission (and all committed
+            # state) at the first EOS, so the commit below just follows
+            # out_len; the EOS token itself is the last emitted slot
+            state, outp = step(t_params, d_params, c["state"], key,
+                               live=live, eos_id=eos_id)
             B = c["lens"].shape[0]
             idx = jnp.arange(K1)[None, :]
             pos = c["lens"][:, None] + idx
-            valid = (idx < outp.out_len[:, None]) & (pos < cap)
+            emitted = (idx < outp.out_len[:, None]) & live[:, None]
+            is_eos = emitted & (outp.out_tokens == eos_id)
+            valid = emitted & (pos < cap)
             pos = jnp.where(valid, pos, cap)
             rows = jnp.arange(B)[:, None]
             o_u = jnp.concatenate(
@@ -648,6 +738,9 @@ def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                 return buf.at[rows, pos].set(
                     jnp.where(valid, vals, fill).astype(buf.dtype))
 
+            lens = c["lens"] + valid.sum(axis=1).astype(jnp.int32)
+            eos_hit = c["eos"] | is_eos.any(axis=1)
+            alive = live.astype(jnp.int32)
             return dict(
                 state=state,
                 toks=commit(c["toks"], outp.out_tokens, 0),
@@ -656,9 +749,14 @@ def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                 us=commit(c["us"], o_u, 0.0),
                 chs=commit(c["chs"], outp.ctx_hashes, 0),
                 msk=commit(c["msk"], outp.masked, False),
-                lens=c["lens"] + valid.sum(axis=1).astype(jnp.int32),
-                total=c["total"] + outp.out_len.sum(),
-                acc_total=c["acc_total"] + outp.n_accepted.sum(),
+                lens=lens,
+                eos=eos_hit,
+                done=c["done"] | eos_hit | (lens >= n_tokens),
+                # per-slot efficiency counters over *alive* steps only, so
+                # drained slots never dilute AATPS / tokens-per-step
+                total=c["total"] + outp.out_len * alive,
+                acc_total=c["acc_total"] + outp.n_accepted * alive,
+                alive_steps=c["alive_steps"] + alive,
                 n_steps=c["n_steps"] + 1,
             )
 
@@ -701,24 +799,79 @@ def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         rep = NamedSharding(mesh, P())
         fn = jax.jit(
             _make_gen_loop(tcfg, dcfg, scfg, mesh=mesh),
-            in_shardings=(t_shardings, d_shardings, c_sh, rep, rep, rep),
+            in_shardings=(t_shardings, d_shardings, c_sh,
+                          rep, rep, rep, rep),
             out_shardings=c_sh)
         _sharded_cache_put(memo, fn)
     return fn
 
 
+def _n_tokens_vec(n_tokens, B: int) -> np.ndarray:
+    """Normalize the ``n_tokens`` argument (scalar or per-slot sequence) to
+    a (B,) int32 target vector."""
+    n_vec = np.asarray(n_tokens, np.int32)
+    if n_vec.ndim == 0:
+        n_vec = np.full((B,), int(n_vec), np.int32)
+    if n_vec.shape != (B,):
+        raise ValueError(f"n_tokens must be a scalar or length-{B} "
+                         f"sequence, got shape {n_vec.shape}")
+    if n_vec.min() < 1:
+        raise ValueError(f"n_tokens targets must be >= 1, got {n_vec}")
+    return n_vec
+
+
+def init_gen_carry(state: Dict[str, Any], n_vec: np.ndarray, cap: int,
+                   eos_id: Optional[int]) -> Dict[str, Any]:
+    """The generation-loop carry over a prepared engine state.
+
+    Slot 0 of each buffer = the pending committed-but-unconsumed token (the
+    prefill sample on a fresh state, the previous call's final token on
+    resume); its metadata lives in the state.  The extra trailing column
+    receives clipped writes.  A slot whose target is already met by the
+    pending token — or whose pending token *is* EOS — starts done."""
+    B = state["last"].shape[0]
+    eos = jnp.int32(-1 if eos_id is None else eos_id)
+    eos0 = state["last"] == eos
+    return {
+        "state": state,
+        "toks": jnp.zeros((B, cap + 1), jnp.int32)
+                   .at[:, 0].set(state["last"]),
+        "fd": jnp.zeros((B, cap + 1), jnp.int8),   # slot 0 is never a draft
+        "us": jnp.zeros((B, cap + 1), jnp.float32)
+                 .at[:, 0].set(state["last_u"]),
+        "chs": jnp.zeros((B, cap + 1), jnp.uint32)
+                  .at[:, 0].set(state["last_ctx"]),
+        "msk": jnp.zeros((B, cap + 1), bool).at[:, 0].set(state["last_msk"]),
+        "lens": jnp.ones((B,), jnp.int32),
+        "eos": eos0,
+        "done": eos0 | (jnp.asarray(n_vec) <= 1),
+        "total": jnp.zeros((B,), jnp.int32),
+        "acc_total": jnp.zeros((B,), jnp.int32),
+        "alive_steps": jnp.zeros((B,), jnp.int32),
+        "n_steps": jnp.zeros((), jnp.int32),
+    }
+
+
 def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
-             scfg: SpecConfig, prompts, *, n_tokens: int, key,
+             scfg: SpecConfig, prompts, *, n_tokens, key,
              max_seq: Optional[int] = None,
              extras: Optional[Dict[str, Any]] = None,
              sync_every: Optional[int] = None,
              state: Optional[Dict[str, Any]] = None,
+             eos_id: Optional[int] = None,
              mesh=None, shard_params: bool = True) -> GenerationResult:
-    """Device-resident generation: run spec steps until every sequence has
-    ≥ n_tokens, committing outputs into on-device buffers inside a jitted
+    """Device-resident generation: run spec steps until every sequence hits
+    its target, committing outputs into on-device buffers inside a jitted
     while-loop.  The host is touched once per generation — or once every
     ``sync_every`` steps when set (streaming), at which point partial
     buffers could be flushed to a consumer.
+
+    Stopping is per-sequence: ``n_tokens`` may be a scalar or a length-B
+    sequence of per-slot targets, and ``eos_id`` (optional) terminates a
+    slot early when it emits that token (the EOS is committed; the slot's
+    ``eos`` flag is set in the result).  A finished slot freezes — no
+    further commits, no state drift, no contribution to the AATPS /
+    tokens-per-step denominators — while the others continue.
 
     Pass a prebuilt ``state`` to reuse an existing prefill, or the
     ``.state`` of a previous GenerationResult to continue a generation —
@@ -733,7 +886,9 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     if sync_every is not None and sync_every < 1:
         raise ValueError(f"sync_every must be >= 1, got {sync_every}")
     B, S0 = prompts.shape
-    max_steps = n_tokens                      # worst case 1 token/step
+    n_vec = _n_tokens_vec(n_tokens, B)
+    n_max = int(n_vec.max())
+    max_steps = n_max                         # worst case 1 token/step
     # a fast sequence can commit K+1 tokens on every step while the slowest
     # commits 1 — size the cache for the worst case so writes never clip.
     max_seq = max_seq or (S0 + 1 + (scfg.K + 1) * max_steps + 2)
@@ -742,26 +897,10 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                            max_seq, key, extras=extras)
 
     K1 = scfg.K + 1
-    cap = n_tokens + K1 + 1
-    # slot 0 = the pending committed-but-unconsumed token (the prefill
-    # sample on a fresh state, the previous call's final token on resume);
-    # its metadata lives in the state.  The extra trailing column receives
-    # clipped writes.
-    carry = {
-        "state": state,
-        "toks": jnp.zeros((B, cap + 1), jnp.int32)
-                   .at[:, 0].set(state["last"]),
-        "fd": jnp.zeros((B, cap + 1), jnp.int8),   # slot 0 is never a draft
-        "us": jnp.zeros((B, cap + 1), jnp.float32)
-                 .at[:, 0].set(state["last_u"]),
-        "chs": jnp.zeros((B, cap + 1), jnp.uint32)
-                  .at[:, 0].set(state["last_ctx"]),
-        "msk": jnp.zeros((B, cap + 1), bool).at[:, 0].set(state["last_msk"]),
-        "lens": jnp.ones((B,), jnp.int32),
-        "total": jnp.zeros((), jnp.int32),
-        "acc_total": jnp.zeros((), jnp.int32),
-        "n_steps": jnp.zeros((), jnp.int32),
-    }
+    cap = n_max + K1 + 1
+    carry = init_gen_carry(state, n_vec, cap, eos_id)
+    n_tok = jnp.asarray(n_vec)
+    eos = jnp.int32(-1 if eos_id is None else eos_id)
     if mesh is not None:
         t_sh = (SHR.param_shardings(_abs_tree(t_params), mesh)
                 if shard_params else replicated_shardings(t_params, mesh))
@@ -774,24 +913,27 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         d_params = jax.device_put(d_params, d_sh)
         carry = jax.device_put(carry, carry_shardings(_abs_tree(carry),
                                                       mesh))
-        key = jax.device_put(key, NamedSharding(mesh, P()))
+        rep = NamedSharding(mesh, P())
+        key = jax.device_put(key, rep)
+        n_tok = jax.device_put(n_tok, rep)
+        eos = jax.device_put(eos, rep)
     else:
         loop = _jitted_gen_loop(tcfg, dcfg, scfg)
     if sync_every is None:
-        carry = loop(t_params, d_params, carry, key,
-                     jnp.int32(n_tokens), jnp.int32(max_steps))
+        carry = loop(t_params, d_params, carry, key, n_tok, eos,
+                     jnp.int32(max_steps))
     else:
         done = 0
         while done < max_steps:
             done = min(done + sync_every, max_steps)
-            carry = loop(t_params, d_params, carry, key,
-                         jnp.int32(n_tokens), jnp.int32(done))
-            if int(np.asarray(carry["lens"]).min()) >= n_tokens:
+            carry = loop(t_params, d_params, carry, key, n_tok, eos,
+                         jnp.int32(done))
+            if bool(np.asarray(carry["done"]).all()):
                 break
     n_steps = int(np.asarray(carry["n_steps"]))
-    denom = max(n_steps * B, 1)
-    aatps = int(np.asarray(carry["acc_total"])) / denom
-    tps = int(np.asarray(carry["total"])) / denom
+    denom = max(int(np.asarray(carry["alive_steps"]).sum()), 1)
+    aatps = int(np.asarray(carry["acc_total"]).sum()) / denom
+    tps = int(np.asarray(carry["total"]).sum()) / denom
     return GenerationResult(
         tokens=np.asarray(carry["toks"])[:, :cap],
         lengths=np.asarray(carry["lens"]),
@@ -800,4 +942,37 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         ctx_hashes=np.asarray(carry["chs"])[:, :cap],
         masked=np.asarray(carry["msk"])[:, :cap],
         aatps=float(aatps), tokens_per_step=float(tps), n_steps=n_steps,
-        state=carry["state"])
+        state=carry["state"], eos=np.asarray(carry["eos"]))
+
+
+def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
+                   scfg: SpecConfig, requests, *, batch: int, key,
+                   max_tokens: Optional[int] = None,
+                   max_prompt_len: Optional[int] = None,
+                   eos_id: Optional[int] = None, sync_every: int = 8,
+                   mesh=None, shard_params: bool = True):
+    """Continuous batching: serve a whole request list through ``batch``
+    live slots, admitting queued prompts into freed slots at sync points
+    of the device-resident loop (see ``serve.scheduler``).
+
+    ``requests``: a sequence of ``scheduler.Request``s, ``(prompt,
+    n_tokens)`` pairs, or ``{"prompt": ..., "n_tokens": ...}`` dicts —
+    admitted FIFO.  ``max_tokens`` / ``max_prompt_len`` size the shared
+    buffers (default: the max over the requests).  Returns a list of
+    ``scheduler.RequestResult`` in uid (submission) order; each result is
+    bit-identical to a solo ``generate()`` of its prompt/key.
+    """
+    from repro.serve.scheduler import Scheduler, as_request
+
+    reqs = [as_request(r) for r in requests]
+    if not reqs:
+        return []
+    max_tokens = max_tokens or max(r.n_tokens for r in reqs)
+    max_prompt_len = max_prompt_len or max(len(r.prompt) for r in reqs)
+    sched = Scheduler(t_params, d_params, tcfg, dcfg, scfg, batch=batch,
+                      key=key, max_tokens=max_tokens,
+                      max_prompt_len=max_prompt_len, eos_id=eos_id,
+                      sync_every=sync_every, mesh=mesh,
+                      shard_params=shard_params)
+    sched.submit_many(reqs)
+    return sched.run()

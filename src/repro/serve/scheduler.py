@@ -1,0 +1,423 @@
+"""Continuous-batching scheduler over the device-resident generation loop.
+
+The engine's jitted while-loop (``engine._make_gen_loop``) already stops
+per-slot (per-slot ``n_tokens`` targets + EOS) and freezes finished slots
+(masked commits, frozen per-slot state, ``live``-masked ``spec_verify_wm``
+rows).  This module adds the multi-request serving layer on top:
+
+- a FIFO **request queue** (admission order == submission order);
+- a per-slot **lifecycle** FREE → PREFILLING → DECODING → DRAINED → FREE;
+- **admission at sync points**: every ``sync_every`` engine steps the loop
+  returns to the host; drained slots are flushed (a per-slot slice of the
+  output/detection buffers — no full all-gather) and queued prompts are
+  prefilled into the freed slots of the *live* batch state (a batch-1
+  prefill scattered into slot ``b`` of every state/buffer row).
+
+The correctness contract is **slot isolation**: a request's committed
+tokens, provenance flags (``src``), acceptance coins, context hashes and
+repeated-context masks are bit-identical to a solo ``engine.generate()``
+run of the same prompt/key, regardless of what is admitted or drained in
+the other slots (enforced by ``tests/test_scheduler.py`` on both the
+single-device and the forced-multi-device mesh paths).  It holds because
+every per-slot quantity (watermark streams, history, caches) is a function
+of the slot's own state and the shared watermark key only — which also
+means it requires ``accept="pseudorandom"`` (Alg. 1): ``standard`` accept
+coins draw from the *global* step index and would entangle slots.
+
+Typical use goes through ``engine.serve_requests()``::
+
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, requests,
+                               batch=8, key=key, max_tokens=128,
+                               eos_id=0, sync_every=8)
+
+or, incrementally::
+
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=8, key=key,
+                      max_tokens=128)
+    for prompt in prompts:
+        sched.submit(prompt, n_tokens=64)
+    results = sched.run()
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.serve import engine as E
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle
+# ---------------------------------------------------------------------------
+
+FREE = "FREE"                # no request; done-masked in the loop
+PREFILLING = "PREFILLING"    # batch-1 prefill being scattered into the slot
+DECODING = "DECODING"        # live in the jitted loop
+DRAINED = "DRAINED"          # finished (target/EOS); awaiting flush
+
+PHASES = (FREE, PREFILLING, DECODING, DRAINED)
+
+
+@dataclasses.dataclass
+class Request:
+    """One prompt to serve.  ``n_tokens`` counts post-prompt tokens
+    (including the prefill sample), exactly like ``generate()``."""
+    prompt: np.ndarray
+    n_tokens: int
+    uid: int = -1
+
+
+def as_request(r) -> Request:
+    """Normalize the accepted intake formats — a ``Request``, a
+    ``{"prompt": ..., "n_tokens": ..., ["uid"]}`` dict, or a ``(prompt,
+    n_tokens)`` pair — to a ``Request`` (the single parser shared by
+    ``Scheduler.submit_many`` and ``engine.serve_requests``)."""
+    if isinstance(r, Request):
+        return r
+    if isinstance(r, dict):
+        return Request(prompt=np.asarray(r["prompt"], np.int32),
+                       n_tokens=int(r["n_tokens"]),
+                       uid=int(r.get("uid", -1)))
+    return Request(prompt=np.asarray(r[0], np.int32), n_tokens=int(r[1]))
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """Per-request output, truncated to the committed length.  The arrays
+    are bit-identical to a solo ``generate()`` of the same prompt/key."""
+    uid: int
+    tokens: np.ndarray        # (n,) committed tokens (post-prompt)
+    src: np.ndarray           # (n,) int8 — 1 = accepted draft token
+    u: np.ndarray             # (n,) acceptance coins aligned to slots
+    ctx_hashes: np.ndarray    # (n,) uint32
+    masked: np.ndarray        # (n,) bool repeated-context flags
+    length: int
+    eos: bool                 # stopped on eos_id (EOS token committed)
+    alive_steps: int          # engine steps this request was live for
+    n_accepted: int           # accepted draft tokens over those steps
+    n_emitted: int            # emitted tokens over those steps
+
+    @property
+    def aatps(self) -> float:
+        return self.n_accepted / max(self.alive_steps, 1)
+
+    @property
+    def tokens_per_step(self) -> float:
+        return self.n_emitted / max(self.alive_steps, 1)
+
+    def as_generation_result(self) -> E.GenerationResult:
+        """A batch-1 ``GenerationResult`` view, so the detection pipeline
+        (``pipeline.records_from_generation``) consumes scheduler output
+        unchanged."""
+        return E.GenerationResult(
+            tokens=self.tokens[None], lengths=np.array([self.length]),
+            from_draft=self.src[None], u=self.u[None],
+            ctx_hashes=self.ctx_hashes[None], masked=self.masked[None],
+            aatps=self.aatps, tokens_per_step=self.tokens_per_step,
+            n_steps=self.alive_steps, eos=np.array([self.eos]))
+
+
+@dataclasses.dataclass
+class _Slot:
+    phase: str = FREE
+    request: Optional[Request] = None
+
+
+def _write_slot_fn(state: Dict[str, Any], sub: Dict[str, Any], b
+                   ) -> Dict[str, Any]:
+    """Scatter a batch-1 engine state into slot ``b`` of the live state.
+
+    Model caches carry their batch dim at axis 1 (leading layer axis)
+    except the per-sequence ``pos`` vector; every other engine field is
+    batch-leading; the scalar ``step_idx`` is shared (and irrelevant under
+    pseudorandom accept)."""
+    out: Dict[str, Any] = {}
+    for k, v in state.items():
+        if k in ("t_cache", "d_cache"):
+            c = {}
+            for ck, cv in v.items():
+                if ck == "pos":
+                    c[ck] = cv.at[b].set(sub[k][ck][0])
+                else:
+                    c[ck] = cv.at[:, b].set(sub[k][ck][:, 0]
+                                            .astype(cv.dtype))
+            out[k] = c
+        elif getattr(v, "ndim", 0) >= 1:
+            out[k] = v.at[b].set(sub[k][0])
+        else:
+            out[k] = v        # shared scalar step state
+    return out
+
+
+class Scheduler:
+    """Continuous batching: ``batch`` live slots fed from a FIFO queue,
+    with admission/flush at the loop's sync points.
+
+    ``max_tokens`` bounds any request's ``n_tokens`` (it sizes the output
+    buffers); ``max_prompt_len`` bounds prompt lengths (it sizes the KV
+    caches).  ``eos_id`` (optional) terminates any slot that emits it.
+    Pass ``mesh`` to run the loop sharded exactly as ``generate(mesh=...)``
+    does — admission scatters into the sharded state, flush slices only
+    the finished slot's rows.
+
+    Compilation note: admission prefills the raw prompt, so each *distinct
+    prompt length* compiles its own prefill (the decode loop itself is
+    shared across all requests).  For length-diverse production traffic,
+    left-pad prompts to a few bucket lengths **before submission** —
+    padding must be part of the request itself (solo ``generate`` of the
+    padded prompt is the bit-exactness reference); the scheduler never
+    pads silently, because that would change the watermark context hashes
+    of early tokens."""
+
+    def __init__(self, t_params, d_params, tcfg: ModelConfig,
+                 dcfg: ModelConfig, scfg: E.SpecConfig, *, batch: int,
+                 key, max_tokens: int, max_prompt_len: int = 64,
+                 eos_id: Optional[int] = None, sync_every: int = 8,
+                 mesh=None, shard_params: bool = True):
+        if scfg.accept != "pseudorandom":
+            raise ValueError(
+                "continuous batching requires accept='pseudorandom': "
+                "'standard' coins draw from the global step index, which "
+                "depends on the other slots' schedules and would break "
+                "slot isolation")
+        if tcfg.arch_type in ("audio", "vlm"):
+            raise ValueError(
+                f"continuous batching does not support arch_type="
+                f"{tcfg.arch_type!r} yet: admission prefills text-only "
+                "prompts and has no per-request modality extras "
+                "(audio_emb/image_emb) — use generate(extras=...) with "
+                "fixed batches")
+        if sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+        self.tcfg, self.dcfg, self.scfg = tcfg, dcfg, scfg
+        self.B, self.key = batch, key
+        self.max_tokens = max_tokens
+        self.max_prompt_len = max_prompt_len
+        self.eos_id = eos_id
+        self.sync_every = sync_every
+        self.mesh = mesh
+        K1 = scfg.K + 1
+        self.max_seq = max_prompt_len + 1 + K1 * max_tokens + 2
+        self.cap = max_tokens + K1 + 1
+
+        self.queue: Deque[Request] = deque()
+        self.slots = [_Slot() for _ in range(batch)]
+        self.n_tok = np.zeros((batch,), np.int32)   # per-slot targets
+        # observability: uids in admission order — the FIFO-fairness
+        # witness asserted by the tests (result ordering itself is by uid)
+        self.admit_order: List[int] = []
+        self.results: Dict[int, RequestResult] = {}
+        self._next_uid = 0
+        self._total_target = 0                      # deadlock bound
+        # cumulative honest serving stats (alive slot-steps only)
+        self._acc = self._emitted = self._alive = 0
+
+        # a dummy prefill gives the state its shapes; every slot starts
+        # FREE (done-masked) and is overwritten by its first admission
+        dummy = jnp.zeros((batch, min(8, max_prompt_len)), jnp.int32)
+        state = E.init_state(t_params, d_params, tcfg, dcfg, scfg, dummy,
+                             self.max_seq, key)
+        self.carry = E.init_gen_carry(state, np.ones((batch,), np.int32),
+                                      self.cap, eos_id)
+        self._eos = jnp.int32(-1 if eos_id is None else eos_id)
+
+        if mesh is not None:
+            t_sh = (E.SHR.param_shardings(E._abs_tree(t_params), mesh)
+                    if shard_params
+                    else E.replicated_shardings(t_params, mesh))
+            d_sh = (E.SHR.param_shardings(E._abs_tree(d_params), mesh)
+                    if shard_params
+                    else E.replicated_shardings(d_params, mesh))
+            self._loop = E._jitted_gen_loop(
+                tcfg, dcfg, scfg, mesh, carry_abs=E._abs_tree(self.carry),
+                t_shardings=t_sh, d_shardings=d_sh)
+            self.t_params = jax.device_put(t_params, t_sh)
+            self.d_params = jax.device_put(d_params, d_sh)
+            self.carry = jax.device_put(
+                self.carry, E.carry_shardings(E._abs_tree(self.carry),
+                                              mesh))
+            self.key = jax.device_put(key, NamedSharding(mesh, P()))
+        else:
+            self._loop = E._jitted_gen_loop(tcfg, dcfg, scfg)
+            self.t_params, self.d_params = t_params, d_params
+        self._admit_jit = jax.jit(self._admit_fn)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt, n_tokens: int, uid: Optional[int] = None
+               ) -> int:
+        """Queue one prompt; returns its uid (FIFO admission order)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not 1 <= len(prompt) <= self.max_prompt_len:
+            raise ValueError(f"prompt length {len(prompt)} outside "
+                             f"[1, {self.max_prompt_len}]")
+        if not 1 <= n_tokens <= self.max_tokens:
+            raise ValueError(f"n_tokens={n_tokens} outside "
+                             f"[1, {self.max_tokens}]")
+        if uid is None:
+            uid = self._next_uid
+        elif (uid in self.results
+              or any(r.uid == uid for r in self.queue)
+              or any(s.request is not None and s.request.uid == uid
+                     for s in self.slots)):
+            raise ValueError(f"uid {uid} already queued, active or served "
+                             "— a duplicate would overwrite its result")
+        self._next_uid = max(self._next_uid, uid) + 1
+        self.queue.append(Request(prompt=prompt, n_tokens=int(n_tokens),
+                                  uid=uid))
+        self._total_target += int(n_tokens)
+        return uid
+
+    def submit_many(self, requests: Sequence) -> List[int]:
+        """Queue requests in order (see ``as_request`` for the accepted
+        formats)."""
+        return [self.submit(r.prompt, r.n_tokens,
+                            uid=None if r.uid < 0 else r.uid)
+                for r in map(as_request, requests)]
+
+    # -- admission (sync point) --------------------------------------------
+
+    def _admit_fn(self, carry, sub, b, n_tok_b):
+        """Jitted: scatter a batch-1 prefill into slot b of the carry —
+        state rows, buffer slot 0 (the prefill sample + its metadata), and
+        fresh per-slot flags/counters."""
+        state = _write_slot_fn(carry["state"], sub, b)
+        eos0 = sub["last"][0] == self._eos
+
+        def row0(buf, v0):
+            row = jnp.zeros((buf.shape[1],), buf.dtype)
+            return buf.at[b].set(row.at[0].set(v0.astype(buf.dtype)))
+
+        zero = jnp.zeros((), jnp.int32)
+        return dict(
+            carry, state=state,
+            toks=row0(carry["toks"], sub["last"][0]),
+            fd=row0(carry["fd"], zero.astype(jnp.int8)),
+            us=row0(carry["us"], sub["last_u"][0]),
+            chs=row0(carry["chs"], sub["last_ctx"][0]),
+            msk=row0(carry["msk"], sub["last_msk"][0]),
+            lens=carry["lens"].at[b].set(1),
+            eos=carry["eos"].at[b].set(eos0),
+            done=carry["done"].at[b].set(eos0 | (n_tok_b <= 1)),
+            total=carry["total"].at[b].set(0),
+            acc_total=carry["acc_total"].at[b].set(0),
+            alive_steps=carry["alive_steps"].at[b].set(0),
+        )
+
+    def _admit(self) -> int:
+        """Fill every FREE slot from the queue head (FIFO); returns the
+        number of admissions."""
+        n = 0
+        for b, slot in enumerate(self.slots):
+            if not self.queue:
+                break
+            if slot.phase != FREE:
+                continue
+            req = self.queue.popleft()
+            slot.phase, slot.request = PREFILLING, req
+            sub = E.init_state(self.t_params, self.d_params, self.tcfg,
+                               self.dcfg, self.scfg, req.prompt[None],
+                               self.max_seq, self.key)
+            self.carry = self._admit_jit(self.carry, sub, jnp.int32(b),
+                                         jnp.int32(req.n_tokens))
+            self.n_tok[b] = req.n_tokens
+            slot.phase = DECODING
+            self.admit_order.append(req.uid)
+            n += 1
+        return n
+
+    # -- decode chunk ------------------------------------------------------
+
+    def _run_chunk(self):
+        """Advance the jitted loop by up to ``sync_every`` steps (it exits
+        earlier when every live slot drains)."""
+        n0 = int(np.asarray(self.carry["n_steps"]))
+        n_tok = jnp.asarray(self.n_tok)
+        limit = jnp.int32(n0 + self.sync_every)
+        if self.mesh is not None:
+            rep = NamedSharding(self.mesh, P())
+            n_tok = jax.device_put(n_tok, rep)
+            limit = jax.device_put(limit, rep)
+        self.carry = self._loop(self.t_params, self.d_params, self.carry,
+                                self.key, n_tok, self._eos, limit)
+
+    # -- flush (sync point) ------------------------------------------------
+
+    def _flush(self) -> List[RequestResult]:
+        """Collect every DECODING slot whose ``done`` flag is set: slice
+        its rows off the device (per-slot, no full-buffer gather), build
+        the RequestResult, free the slot."""
+        flags = jax.device_get({k: self.carry[k] for k in
+                                ("done", "eos", "lens", "total",
+                                 "acc_total", "alive_steps")})
+        out: List[RequestResult] = []
+        for b, slot in enumerate(self.slots):
+            if slot.phase != DECODING or not bool(flags["done"][b]):
+                continue
+            slot.phase = DRAINED
+            n = int(flags["lens"][b])
+            row = jax.device_get({
+                "toks": self.carry["toks"][b, :n],
+                "fd": self.carry["fd"][b, :n],
+                "us": self.carry["us"][b, :n],
+                "chs": self.carry["chs"][b, :n],
+                "msk": self.carry["msk"][b, :n]})
+            req = slot.request
+            res = RequestResult(
+                uid=req.uid, tokens=np.asarray(row["toks"]),
+                src=np.asarray(row["fd"]), u=np.asarray(row["us"]),
+                ctx_hashes=np.asarray(row["chs"]),
+                masked=np.asarray(row["msk"]), length=n,
+                eos=bool(flags["eos"][b]),
+                alive_steps=int(flags["alive_steps"][b]),
+                n_accepted=int(flags["acc_total"][b]),
+                n_emitted=int(flags["total"][b]))
+            self._acc += res.n_accepted
+            self._emitted += res.n_emitted
+            self._alive += res.alive_steps
+            self.results[req.uid] = res
+            out.append(res)
+            slot.phase, slot.request = FREE, None
+            self.n_tok[b] = 0
+        return out
+
+    # -- drive -------------------------------------------------------------
+
+    def _active(self) -> bool:
+        return any(s.phase != FREE for s in self.slots)
+
+    def run(self) -> List[RequestResult]:
+        """Drain the queue: admit → decode chunk → flush, until every
+        request completed.  Returns results in uid order."""
+        # every round either flushes a request or advances >= 1 committed
+        # token on some live slot, so this bound is unreachable unless the
+        # scheduler genuinely deadlocks
+        limit = 4 + 2 * len(self.queue) + self._total_target
+        rounds = 0
+        self._admit()
+        while self.queue or self._active():
+            rounds += 1
+            if rounds > limit:
+                raise RuntimeError(
+                    f"scheduler stalled after {rounds} sync rounds "
+                    f"(queue={len(self.queue)}, "
+                    f"slots={[s.phase for s in self.slots]})")
+            self._run_chunk()
+            self._flush()
+            self._admit()
+        return [self.results[uid] for uid in sorted(self.results)]
+
+    def stats(self) -> Dict[str, float]:
+        """Cumulative honest serving stats over flushed requests (drained
+        slots never count toward the denominators)."""
+        denom = max(self._alive, 1)
+        return {"served": float(len(self.results)),
+                "aatps": self._acc / denom,
+                "tokens_per_step": self._emitted / denom,
+                "alive_slot_steps": float(self._alive)}

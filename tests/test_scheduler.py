@@ -1,0 +1,336 @@
+"""Continuous-batching scheduler: the slot-isolation invariant (every
+request's committed tokens, provenance flags and detection records are
+bit-identical to a solo ``generate()`` of the same prompt/key, whatever is
+admitted or drained in the other slots), per-slot stopping, EOS drain, and
+queue-order fairness under stress.
+
+The sharded variant spawns a subprocess (``__main__`` below) because
+``--xla_force_host_platform_device_count`` must be set before jax first
+initializes (see tests/test_engine_sharded.py).
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from tests._hyp import HAVE_HYPOTHESIS, given, settings, st
+except ImportError:     # running this file as the subprocess body
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+V = 96
+
+
+def _make_pair():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    tcfg = get_smoke_config("yi-6b", vocab=V, d_model=64, d_ff=128,
+                            n_heads=2, n_kv_heads=2, head_dim=32)
+    dcfg = get_smoke_config("yi-6b", n_layers=1, vocab=V, d_model=32,
+                            d_ff=64, n_heads=2, n_kv_heads=2, head_dim=16)
+    tp = M.init_params(jax.random.key(0), tcfg)
+    dp = M.init_params(jax.random.key(1), dcfg)
+    return tcfg, dcfg, tp, dp
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return _make_pair()
+
+
+@pytest.fixture(scope="module")
+def key():
+    import jax
+    return jax.random.key(1234)
+
+
+def _random_schedule(seed, n_requests, *, lo=4, hi=13, plen_lo=4,
+                     plen_hi=9):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, V, size=int(rng.integers(plen_lo, plen_hi)))
+             .astype(np.int32), int(rng.integers(lo, hi)))
+            for _ in range(n_requests)]
+
+
+def _assert_request_matches_solo(r, solo, ctx=""):
+    """Bit-equality of every per-request field against the solo run."""
+    ns = int(solo.lengths[0])
+    assert r.length == ns, (ctx, r.uid, r.length, ns)
+    for name, a, b in (
+            ("tokens", r.tokens, solo.tokens[0]),
+            ("src", r.src, solo.from_draft[0]),
+            ("u", r.u, solo.u[0]),
+            ("ctx_hashes", r.ctx_hashes, solo.ctx_hashes[0]),
+            ("masked", r.masked, solo.masked[0])):
+        np.testing.assert_array_equal(a, b[:ns],
+                                      err_msg=f"{ctx} req {r.uid} {name}")
+
+
+@pytest.mark.parametrize("wm,n_req", [("gumbel", 6), ("synthid", 3)])
+def test_slot_isolation_random_schedule(pair, key, wm, n_req):
+    """The acceptance invariant, single-device: a random admission/
+    termination schedule (mixed prompt lengths and targets over B=2 slots)
+    yields per-request streams and detection records bit-equal to solo
+    generate() runs — on the fused (gumbel) and jnp tournament (synthid)
+    verification tails."""
+    import jax.numpy as jnp
+    from repro.core.detection import pipeline
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark=wm)
+    reqs = _random_schedule(7, n_req)
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=key, sync_every=2)
+    assert len(results) == len(reqs)
+    dec = E.make_decoder(scfg)
+    for r, (prompt, n) in zip(results, reqs):
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(prompt)[None], n_tokens=n, key=key)
+        _assert_request_matches_solo(r, solo)
+        # detection records (tokens, recovered stats, coins, src) identical
+        rec_s = pipeline.records_from_generation(
+            r.as_generation_result(), dec, key, tcfg.vocab)[0]
+        rec_r = pipeline.records_from_generation(solo, dec, key,
+                                                 tcfg.vocab)[0]
+        for f in ("tokens", "y_draft", "y_target", "u", "src", "ctx"):
+            np.testing.assert_array_equal(
+                getattr(rec_s, f), getattr(rec_r, f),
+                err_msg=f"req {r.uid} record.{f}")
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       targets=st.lists(st.sampled_from([3, 5, 8]), min_size=3,
+                        max_size=5))
+def test_slot_isolation_property(seed, targets):
+    """Hypothesis: for arbitrary admission/termination schedules, every
+    request's stream is a bit-exact prefix of its solo run.  Prompt length
+    is fixed and targets come from a small set so traces are shared across
+    examples."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = _make_pair()
+    key = jax.random.key(1234)
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    rng = np.random.default_rng(seed)
+    reqs = [(rng.integers(1, V, size=6).astype(np.int32), n)
+            for n in targets]
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=key, sync_every=2, max_tokens=8)
+    for r, (prompt, n) in zip(results, reqs):
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(prompt)[None], n_tokens=n, key=key)
+        _assert_request_matches_solo(r, solo, ctx=f"seed={seed}")
+
+
+def test_slot_isolation_sharded():
+    """The acceptance invariant on the PR 2 mesh path: the same schedule
+    served with ``mesh=`` on a forced multi-device CPU mesh is bit-equal
+    to solo single-device runs (subprocess: XLA_FLAGS must precede jax
+    init)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = (os.path.join(here, "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, os.path.abspath(__file__)],
+                         env=env, capture_output=True, text=True,
+                         timeout=1200)
+    assert out.returncode == 0, f"\n--- stdout ---\n{out.stdout}" \
+                                f"\n--- stderr ---\n{out.stderr}"
+    assert "SCHEDULER SHARDED PARITY OK" in out.stdout, out.stdout
+
+
+def test_per_slot_targets_no_overgeneration(pair, key):
+    """Regression for the global-``n_tokens`` loop cond: with per-slot
+    targets [4, 20, 20], the short slot stops committing (its buffer tail
+    stays zero) while the long slots continue to their own targets, and
+    the short stream is an exact prefix of the long-target stream."""
+    import jax
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V)
+    r_all = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=20,
+                       key=key)
+    r_mix = E.generate(tp, dp, tcfg, dcfg, scfg, prompts,
+                       n_tokens=[4, 20, 20], key=key)
+    n0 = int(r_mix.lengths[0])
+    # the short slot stopped within one step of its target...
+    assert 4 <= n0 <= 4 + scfg.K
+    # ...committed a bit-exact prefix of the long-target run...
+    np.testing.assert_array_equal(r_mix.tokens[0, :n0],
+                                  r_all.tokens[0, :n0])
+    # ...and nothing was over-generated into its buffer afterwards
+    assert np.all(r_mix.tokens[0, n0:] == 0)
+    assert np.all(r_mix.u[0, n0:] == 0)
+    # the long slots are unperturbed by the short slot draining early
+    for b in (1, 2):
+        nb = int(r_mix.lengths[b])
+        assert nb >= 20 and nb == int(r_all.lengths[b])
+        np.testing.assert_array_equal(r_mix.tokens[b, :nb],
+                                      r_all.tokens[b, :nb])
+
+
+def test_eos_end_to_end(pair, key):
+    """A slot that emits EOS mid-chunk stops with the EOS committed, its
+    detection record length matches its emitted length, and drained slots
+    are excluded from the AATPS / tokens-per-step denominators."""
+    import jax
+    from repro.core.detection import pipeline
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V)
+    base = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=20,
+                      key=key)
+    # pick a token the stream actually emits mid-chunk and declare it EOS
+    eos = int(base.tokens[0, 6])
+    first = int(np.argmax(np.asarray(base.tokens[0, :20]) == eos))
+    r = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=20, key=key,
+                   eos_id=eos)
+    assert bool(r.eos[0])
+    n0 = int(r.lengths[0])
+    assert n0 == first + 1                       # EOS itself is committed
+    assert int(r.tokens[0, n0 - 1]) == eos
+    np.testing.assert_array_equal(r.tokens[0, :n0], base.tokens[0, :n0])
+    assert np.all(r.tokens[0, n0:] == 0)         # no commits past EOS
+    # detection record length == emitted length (EOS included)
+    dec = E.make_decoder(scfg)
+    recs = pipeline.records_from_generation(r, dec, key, tcfg.vocab)
+    assert len(recs[0].tokens) == n0
+    assert len(recs[0].u) == n0 and len(recs[0].src) == n0
+    # stats count delivered tokens: the EOS-cut step may emit only drafts,
+    # so tps sits in (aatps, aatps + 1]
+    assert r.aatps < r.tokens_per_step <= r.aatps + 1.0 + 1e-9
+
+    # the stopped slot's state ends exactly at the EOS (no post-EOS state
+    # drift): resuming it re-emits the EOS and immediately drains again
+    assert int(np.asarray(r.state["last"])[0]) == eos
+    rr = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=5, key=key,
+                    eos_id=eos, state=r.state)
+    assert int(rr.lengths[0]) == 1 and bool(rr.eos[0])
+    assert int(rr.tokens[0, 0]) == eos
+
+    # stats exclude drained slots exactly: a slot that drains immediately
+    # (target 1) contributes nothing, so batch stats equal the solo stats
+    # of the surviving slot
+    r2 = E.generate(tp, dp, tcfg, dcfg, scfg, prompts[:2],
+                    n_tokens=[1, 16], key=key)
+    solo = E.generate(tp, dp, tcfg, dcfg, scfg, prompts[1:2], n_tokens=16,
+                      key=key)
+    assert int(r2.lengths[0]) == 1
+    assert r2.aatps == solo.aatps
+    assert r2.tokens_per_step == solo.tokens_per_step
+
+    # scheduler end-to-end: EOS-terminated requests bit-match their solo
+    # EOS runs (slot isolation holds across early drains + re-admissions)
+    reqs = _random_schedule(13, 4, lo=8, hi=13)
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=key, sync_every=2, eos_id=eos)
+    for rq, (prompt, n) in zip(results, reqs):
+        import jax.numpy as jnp
+        s = E.generate(tp, dp, tcfg, dcfg, scfg, jnp.asarray(prompt)[None],
+                       n_tokens=n, key=key, eos_id=eos)
+        _assert_request_matches_solo(rq, s, ctx="eos")
+        assert rq.eos == bool(s.eos[0])
+
+
+def test_scheduler_lifecycle_and_validation(pair, key):
+    """Slot lifecycle bookkeeping: FIFO admission order, slots freed after
+    drain, honest cumulative stats, and intake validation."""
+    from repro.serve import engine as E
+    from repro.serve import scheduler as S
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    sched = S.Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                        max_tokens=8, max_prompt_len=8, sync_every=2)
+    rng = np.random.default_rng(0)
+    uids = [sched.submit(rng.integers(1, V, size=6), 4) for _ in range(5)]
+    results = sched.run()
+    assert [r.uid for r in results] == uids
+    assert sched.admit_order == uids             # queue-order fairness
+    assert all(s.phase == S.FREE for s in sched.slots)
+    assert not sched.queue
+    stats = sched.stats()
+    assert stats["served"] == 5
+    assert 0.0 <= stats["aatps"] <= scfg.K
+    assert stats["tokens_per_step"] == pytest.approx(stats["aatps"] + 1.0)
+    with pytest.raises(ValueError):
+        sched.submit(rng.integers(1, V, size=6), 99)     # over max_tokens
+    with pytest.raises(ValueError):
+        sched.submit(rng.integers(1, V, size=64), 4)     # over prompt cap
+    with pytest.raises(ValueError):                      # uid collision
+        sched.submit(rng.integers(1, V, size=6), 4, uid=uids[0])
+    with pytest.raises(ValueError):
+        S.Scheduler(tp, dp, tcfg, dcfg,
+                    E.SpecConfig(K=2, watermark="none", accept="standard"),
+                    batch=2, key=key, max_tokens=8)
+
+
+@pytest.mark.slow
+def test_scheduler_stress_fairness_and_drain(pair, key):
+    """Hundreds of queued requests with random lengths over B=4 slots: no
+    deadlock, full drain, FIFO admission, and every request completes
+    within one speculative step of its target (nightly CI)."""
+    from repro.serve import engine as E
+    from repro.serve import scheduler as S
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    sched = S.Scheduler(tp, dp, tcfg, dcfg, scfg, batch=4, key=key,
+                        max_tokens=8, max_prompt_len=6, sync_every=4)
+    rng = np.random.default_rng(42)
+    n_req = 200
+    targets = {}
+    for _ in range(n_req):
+        uid = sched.submit(rng.integers(1, V, size=5).astype(np.int32),
+                           int(rng.integers(2, 9)))
+        targets[uid] = None
+    results = sched.run()                        # raises on deadlock
+    assert len(results) == n_req                 # full drain
+    assert not sched.queue
+    assert all(s.phase == S.FREE for s in sched.slots)
+    assert sched.admit_order == sorted(targets)  # queue-order fairness
+    for r in results:
+        assert r.length >= 2
+        assert r.length <= 8 + scfg.K            # target + crossing step
+    assert sched.stats()["served"] == n_req
+
+
+# ---------------------------------------------------------------------------
+# Subprocess body: sharded scheduler parity (8 fake CPU devices).
+# ---------------------------------------------------------------------------
+
+
+def _main():
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import engine as E
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_host_mesh(data=4, model=1)
+    tcfg, dcfg, tp, dp = _make_pair()
+    key = jax.random.key(1234)
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    reqs = _random_schedule(11, 6, lo=4, hi=10, plen_lo=6, plen_hi=7)
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=4,
+                               key=key, sync_every=2, mesh=mesh,
+                               shard_params=False)
+    assert len(results) == len(reqs)
+    for r, (prompt, n) in zip(results, reqs):
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(prompt)[None], n_tokens=n, key=key)
+        _assert_request_matches_solo(r, solo, ctx="sharded")
+    print("SCHEDULER SHARDED PARITY OK")
+
+
+if __name__ == "__main__":
+    _main()

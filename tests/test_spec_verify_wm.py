@@ -110,6 +110,27 @@ def test_cpu_fast_path_matches_interpret():
                   ops.spec_verify_wm(*args, interpret=True), "fast-path")
 
 
+def test_live_mask_skips_drained_rows():
+    """The continuous-batching slot mask: dead rows produce the kernel's
+    zero-initialized outputs (identically in the mirror and under the
+    interpreter), live rows are bit-unchanged vs the unmasked call."""
+    args = _inputs(4, 3, 257, seed=5)
+    live = jnp.array([1, 0, 1, 0], jnp.int32)
+    lv = np.asarray(live, bool)
+    base = ops.spec_verify_wm(*args)
+    for interp in (None, True):
+        outs = ops.spec_verify_wm(*args, live, interpret=interp)
+        for a, m, nm in zip(base, outs, ["n_acc", "acc", "etok", "eu"]):
+            a, m = np.asarray(a), np.asarray(m)
+            np.testing.assert_array_equal(m[lv], a[lv],
+                                          err_msg=f"live rows {nm}")
+            assert np.all(m[~lv] == 0), (interp, nm)
+    # mirror and interpreter agree on the masked call as a whole
+    _assert_match(ops.spec_verify_wm(*args, live),
+                  ops.spec_verify_wm(*args, live, interpret=True),
+                  "live-masked")
+
+
 # ---------------------------------------------------------------------------
 # Engine-level parity: fused tail vs jnp tail, same PRF key -> same tokens.
 # ---------------------------------------------------------------------------
