@@ -5,15 +5,19 @@ emitted tokens:
 
   * ``seed``  — the pre-fusion path: jnp step tail that materializes the
     (B, K, V) residual distributions and samples a residual token at every
-    slot, driven by a host loop that syncs five arrays and runs a
-    per-sequence Python commit loop on every step;
-  * ``fused`` — the ``spec_verify_wm``-fused tail (one (V,) race per row)
-    inside the device-resident ``generate`` (one host sync total).
+    slot (for SynthID: the m-round tournament per candidate slot), driven
+    by a host loop that syncs five arrays and runs a per-sequence Python
+    commit loop on every step;
+  * ``fused`` — the ``spec_verify_wm``-fused tail (one (V,) race — or one
+    VMEM-resident m-round tournament — per row) inside the device-resident
+    ``generate`` (one host sync total).
 
 Rows report tokens/s, ms/step and a token-identity check across (B, K, V)
-sweeps and both accept modes.  CPU measurement mode: model + tail run under
-XLA; on TPU the tail stages the Mosaic kernel instead of its bit-exact
-mirror (see kernels/ops.py).
+sweeps, both accept modes, and both watermark schemes (gumbel, and the
+synthid m=30 tournament at B=8, K=4, V=32000 — where the m-round tail is
+most expensive).  CPU measurement mode: model + tail run under XLA; on TPU
+the tail stages the Mosaic kernel instead of its bit-exact mirror (see
+kernels/ops.py).
 """
 from __future__ import annotations
 
@@ -88,8 +92,13 @@ def run(quick: bool = False, verbose: bool = True):
     for B, K, V in sweeps:
         tcfg, dcfg, tp, dp = _pair(V)
         prompts = jax.random.randint(jax.random.key(2), (B, 8), 1, V)
-        for accept in accepts:
-            scfg = E.SpecConfig(K=K, watermark="gumbel", accept=accept)
+        variants = [("gumbel", accept) for accept in accepts]
+        if (B, K, V) == (8, 4, 32000):
+            # the synthid tournament tail (m=30), exactly where the
+            # m-round resample makes the jnp tail most expensive
+            variants.append(("synthid", "pseudorandom"))
+        for wm, accept in variants:
+            scfg = E.SpecConfig(K=K, watermark=wm, m=30, accept=accept)
             scfg_seed = dataclasses.replace(scfg, fused="off")
             # one shared prefill; both paths decode from it (the decode
             # phase is what this PR optimizes; prefill is a common prefix)
@@ -128,7 +137,7 @@ def run(quick: bool = False, verbose: bool = True):
             tps_new = emitted_new / dt_new
             tps_old = s_emitted / dt_old
             rows.append({
-                "B": B, "K": K, "V": V, "accept": accept,
+                "B": B, "K": K, "V": V, "accept": accept, "watermark": wm,
                 "tok_per_s_fused": round(tps_new, 1),
                 "tok_per_s_seed": round(tps_old, 1),
                 "speedup": round(tps_new / tps_old, 2),
@@ -138,7 +147,8 @@ def run(quick: bool = False, verbose: bool = True):
             })
             if verbose:
                 r = rows[-1]
-                print(f"spec_step,B={B},K={K},V={V},accept={accept},"
+                print(f"spec_step,B={B},K={K},V={V},wm={wm},"
+                      f"accept={accept},"
                       f"fused={r['tok_per_s_fused']}tok/s,"
                       f"seed={r['tok_per_s_seed']}tok/s,"
                       f"x{r['speedup']},exact={identical}", flush=True)

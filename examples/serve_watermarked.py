@@ -98,6 +98,13 @@ def main():
     ap.add_argument("--continuous", type=int, default=0, metavar="N",
                     help="additionally serve N mixed-length requests "
                          "through the continuous-batching scheduler")
+    ap.add_argument("--watermark", default="gumbel",
+                    choices=["gumbel", "synthid", "synthid-inf"],
+                    help="watermark scheme for the --continuous demo "
+                         "(both run the fused device-resident tail: the "
+                         "Gumbel race or the synthid tournament)")
+    ap.add_argument("--m", type=int, default=30,
+                    help="synthid tournament rounds")
     args = ap.parse_args()
 
     tcfg, dcfg, tp, dp, cp = common.train_pair()
@@ -134,10 +141,11 @@ def main():
     if args.continuous:
         cb = serve_continuous(
             tcfg, dcfg, tp, dp, cp,
-            E.SpecConfig(K=args.k, watermark="gumbel", temperature=0.9,
-                         ctx_window=8),
+            E.SpecConfig(K=args.k, watermark=args.watermark, m=args.m,
+                         temperature=0.9, ctx_window=8),
             n_requests=args.continuous, batch=args.batch, key=key)
-        print(f"Continuous batch.: {cb['requests']} requests  "
+        print(f"Continuous batch. ({args.watermark}): "
+              f"{cb['requests']} requests  "
               f"AATPS={cb['aatps']:.3f}  "
               f"throughput={cb['tok_per_s']:.1f} tok/s")
 

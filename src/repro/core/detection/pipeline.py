@@ -4,7 +4,15 @@ At detection time we only have tokens + the watermark key: context hashes,
 the candidate statistics y^D / y^T, and the acceptance coins u = G(ζ^R) are
 all *recovered* (that recoverability is the whole point of Alg. 1).  The
 ``src`` ground truth is only available from the engine (oracle/MLP
-training)."""
+training).
+
+Served fast path: the engine now records every emitted token's y^D / y^T
+statistics as it generates (``GenerationResult.y_draft``/``y_target``,
+``(B, N, stat_dim)``), bit-identical to the recovery below (same counter
+PRF per token).  ``records_from_generation`` consumes those buffers
+directly — skipping the O(N·stat_dim) host recovery — whenever the result
+carries stats recorded under the *same* decoder (``stat_scheme`` tag);
+``null_records`` (arbitrary suspect text) always recovers."""
 from __future__ import annotations
 
 from typing import List, Optional, Sequence
@@ -16,7 +24,7 @@ import numpy as np
 from repro.core import prf
 from repro.core.detection.records import SeqRecord
 from repro.core.watermark.base import Decoder
-from repro.serve.engine import GenerationResult
+from repro.serve.engine import GenerationResult, key_fingerprint
 
 
 def recover_u(key, ctx_hashes: np.ndarray) -> np.ndarray:
@@ -31,20 +39,45 @@ def _stats(dec: Decoder, tokens, key, hashes, stream, vocab):
     return np.asarray(y)
 
 
+def _squeeze_stat(y: np.ndarray, dec: Decoder) -> np.ndarray:
+    """Served stats are (n, stat_dim); match the scheme's declared
+    recovery convention — flat (n,) for scalar-stat schemes (gumbel),
+    trailing (n, stat_dim) otherwise (synthid keeps the axis even at
+    m == 1)."""
+    return y[..., 0] if dec.flat_stat else y
+
+
 def records_from_generation(res: GenerationResult, dec: Decoder, key,
                             vocab: int, *, n_tokens: Optional[int] = None,
-                            watermarked: bool = True) -> List[SeqRecord]:
-    """One SeqRecord per sequence, truncated to ``n_tokens``."""
+                            watermarked: bool = True,
+                            use_served: bool = True) -> List[SeqRecord]:
+    """One SeqRecord per sequence, truncated to ``n_tokens``.  When the
+    result carries served detection-stat buffers recorded under ``dec``
+    (and ``use_served``), they are consumed directly instead of being
+    re-recovered from (key, context, token)."""
     out: List[SeqRecord] = []
     B = res.tokens.shape[0]
+    # served stats are only trusted when recorded under the SAME decoder
+    # (name + stat width) and the SAME PRF key — a wrong-key detection run
+    # (false-positive calibration) must re-recover, not echo the
+    # generation-time statistics
+    served = (use_served and res.y_draft is not None
+              and res.stat_scheme == dec.name
+              and res.y_draft.shape[-1] == dec.stat_dim
+              and res.stat_key is not None
+              and res.stat_key == key_fingerprint(key))
     for b in range(B):
         n = int(res.lengths[b])
         if n_tokens is not None:
             n = min(n, n_tokens)
         toks = res.tokens[b, :n]
         hashes = res.ctx_hashes[b, :n]
-        y_d = _stats(dec, toks, key, hashes, prf.STREAM_DRAFT, vocab)
-        y_t = _stats(dec, toks, key, hashes, prf.STREAM_TARGET, vocab)
+        if served:
+            y_d = _squeeze_stat(np.asarray(res.y_draft[b, :n]), dec)
+            y_t = _squeeze_stat(np.asarray(res.y_target[b, :n]), dec)
+        else:
+            y_d = _stats(dec, toks, key, hashes, prf.STREAM_DRAFT, vocab)
+            y_t = _stats(dec, toks, key, hashes, prf.STREAM_TARGET, vocab)
         u = recover_u(key, hashes)
         # from_draft matches StepOutput semantics: 1 = accepted draft token
         acc = float(np.mean(res.from_draft[b, :n] == 1))

@@ -104,10 +104,16 @@ def gumbel_uniforms(key, ctx_hash, stream: int, vocab: int):
 
 
 def synthid_gbits(key, ctx_hash, stream: int, m: int, vocab: int):
-    """The m Bernoulli(0.5) g-vectors of SynthID: (m, vocab) in {0,1}."""
-    bits = jax.random.bernoulli(
-        stream_key(key, ctx_hash, stream), 0.5, (m, vocab))
-    return bits.astype(jnp.float32)
+    """The m Bernoulli(0.5) g-vectors of SynthID: (m, vocab) in {0,1}.
+
+    Expanded with the integer counter PRF (counter ``w + vocab·l``) from a
+    threefry-derived seed — the exact program of the Pallas tournament
+    kernels, so host sampling, detection and the fused verification tail
+    agree bit-exactly (mirroring the gumbel-uniform unification)."""
+    seed = wm_seed(key, ctx_hash, stream)
+    w = jnp.arange(vocab, dtype=jnp.uint32)
+    layers = jnp.arange(m, dtype=jnp.uint32)[:, None]
+    return kernel_gbit(seed, w[None, :] + jnp.uint32(vocab) * layers)
 
 
 def accept_uniform(key, ctx_hash):

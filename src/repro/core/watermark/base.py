@@ -1,4 +1,4 @@
-"""Unbiased watermark decoder interface.
+"""Unbiased watermark decoder interface — the scheme-capability registry.
 
 A decoder S maps (P, ζ) to a modified distribution P_ζ with
 E_ζ[P_ζ] = P (unbiasedness).  We expose two views:
@@ -10,6 +10,42 @@ E_ζ[P_ζ] = P (unbiasedness).  We expose two views:
   g-bits of the selected token).
 
 Decoders are registered by name for config-driven selection.
+
+Serving capabilities
+--------------------
+Beyond the sampling/recovery callables, every ``Decoder`` *declares* how
+the serving engine should drive it — the engine never string-matches on
+scheme names:
+
+- ``draft_stream`` / ``target_stream``: the PRF stream ids the scheme's
+  watermarked draws consume on the drafting (ζ^D) and verification-tail
+  (ζ^T) sides.  Watermark schemes use the plain ``prf.STREAM_DRAFT`` /
+  ``prf.STREAM_TARGET``; the unwatermarked decoder declares offset plain
+  streams so its randomness never collides with a recoverable stream.
+- ``stat_dim``: width of the per-token detection statistic y_t (1 for the
+  scalar Gumbel U, m for SynthID's g-bit vector).  The engine's stat
+  buffers and the detection records are ``(..., stat_dim)``-shaped off
+  this declaration.
+- ``token_stat(seed, token, vocab) -> (stat_dim,)``: recover y_t of one
+  token from its per-(context, stream) counter-PRF seed — O(stat_dim)
+  per token, used by the engine to fill the served detection-stat
+  buffers and by ``recover_stats`` at detection time.  ``None`` means
+  the scheme has no recoverable statistic (the engine records zeros).
+- ``fused_tail``: a ``FusedTail`` spec describing the scheme's in-kernel
+  verification-tail branch (``kernels.ops.spec_verify_wm``), or ``None``
+  when the scheme registers no fused tail — then ``fused="auto"`` falls
+  back to the jnp tail and ``fused="on"`` raises.
+- ``draft_sampler(probs, wm_seeds, draw_seeds, plain_seeds, seen)``:
+  batched fused draft sampling (B, V) -> (B,) tokens, bit-identical to
+  ``sample`` with the repeated-context fallback folded in.  ``None``
+  means the engine uses the generic per-row ``sample`` path.
+
+Padded-lane contract: schemes whose math contains vocab-extent float
+reductions (SynthID's tournament masses and normalizer) MUST run them at
+the 128-lane padded extent ``pad128(V)`` — XLA reductions are not
+bit-invariant to the reduced extent, and the Pallas kernels compute on
+lane-padded rows.  ``pad128`` is the shared convention; elementwise math
+(Gumbel races) is extent-agnostic and needs no padding.
 """
 from __future__ import annotations
 
@@ -18,6 +54,62 @@ from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import prf
+
+EPS = 1e-30
+LANES = 128
+
+
+def pad128(v: int) -> int:
+    """Vocab padded up to the TPU lane multiple (the shared reduction
+    extent of kernels, mirrors and padded-math decoders)."""
+    return -(-v // LANES) * LANES
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedTail:
+    """Static description of a scheme's fused verification-tail branch,
+    consumed (as a hashable jit-static) by ``kernels.ops.spec_verify_wm``.
+
+    kind="race":       single Gumbel-max race over the residual/bonus row
+                       (Gumbel-max and plain categorical sampling).
+    kind="tournament": m-round SynthID tournament over the normalized
+                       residual/bonus row, then a counter-PRF race
+                       (finite m) or argmax (degenerate, m→∞ limit).
+    """
+    kind: str                  # "race" | "tournament"
+    m: int = 0                 # tournament rounds (kind="tournament")
+    stat_dim: int = 1          # width of the kernel's emitted-token stat
+    degenerate: bool = False   # point-mass scheme: argmax, no draw coin
+
+    @property
+    def needs_draw_seeds(self) -> bool:
+        """Finite-m tournaments consume one extra pseudorandom draw coin
+        per slot (the categorical race seed); races and degenerate
+        tournaments do not."""
+        return self.kind == "tournament" and not self.degenerate
+
+
+def race_argmax(probs, seed):
+    """Categorical sample of one row as a Gumbel-max race with counter-PRF
+    uniforms — bit-compatible with the in-kernel race (same seed -> same
+    token).  Scale-invariant in ``probs`` (no normalization needed)."""
+    w = jnp.arange(probs.shape[-1], dtype=jnp.uint32)
+    uv = prf.kernel_uniform(seed, w)
+    score = jnp.log(uv) / jnp.maximum(probs, EPS)
+    score = jnp.where(probs > 0, score, -jnp.inf)
+    return jnp.argmax(score).astype(jnp.int32)
+
+
+def race_draft_sampler(probs, wm_seeds, draw_seeds, plain_seeds, seen):
+    """Fused draft sampling for race-family schemes: the watermarked draw
+    and the repeated-context fallback are both Gumbel races over the same
+    row, so selecting the seed first halves the race count while staying
+    bit-identical to the two-branch ``sample`` path."""
+    del draw_seeds  # races have no extra draw coin
+    seeds = jnp.where(seen, plain_seeds, wm_seeds)
+    return jax.vmap(race_argmax)(probs, seeds)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +123,18 @@ class Decoder:
     recover_stats: Callable
     stat_dim: int = 1        # 1 for gumbel (scalar U), m for synthid
     degenerate: bool = False  # True if P_zeta is a.s. a point mass
+    # recovery convention: True when recover_stats returns flat (...,)
+    # statistics (gumbel's scalar U); False when it keeps a trailing
+    # (..., stat_dim) axis (synthid g-bits — even at m == 1)
+    flat_stat: bool = True
+    # --- serving capabilities (see module docstring) ---
+    draft_stream: int = prf.STREAM_DRAFT
+    target_stream: int = prf.STREAM_TARGET
+    # (seed u32, token, vocab) -> (stat_dim,) f32 per-token statistic
+    token_stat: Optional[Callable] = None
+    fused_tail: Optional[FusedTail] = None
+    # (probs (B,V), wm/draw/plain seeds (B,), seen (B,)) -> tokens (B,)
+    draft_sampler: Optional[Callable] = None
 
 _REGISTRY: Dict[str, Callable[..., Decoder]] = {}
 

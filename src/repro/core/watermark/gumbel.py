@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import prf
-from repro.core.watermark.base import Decoder, register
+from repro.core.watermark.base import (Decoder, FusedTail, race_draft_sampler,
+                                       register)
 
 
 def _scores(probs, u):
@@ -48,7 +49,17 @@ def recover_stats(tokens, key, ctx_hashes, stream, vocab: int):
     return ys.reshape(tokens.shape)
 
 
+def token_stat(seed, token, vocab):
+    """y_t = U_{w_t} of one token from its per-context seed: (1,) f32."""
+    del vocab
+    return prf.kernel_uniform(seed, token.astype(jnp.uint32))[None]
+
+
 @register("gumbel")
 def make(**kw) -> Decoder:
     return Decoder(name="gumbel", modified_dist=modified_dist, sample=sample,
-                   recover_stats=recover_stats, stat_dim=1, degenerate=True)
+                   recover_stats=recover_stats, stat_dim=1, degenerate=True,
+                   token_stat=token_stat,
+                   fused_tail=FusedTail(kind="race", stat_dim=1,
+                                        degenerate=True),
+                   draft_sampler=race_draft_sampler)

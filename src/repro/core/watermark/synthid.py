@@ -8,9 +8,19 @@ the operator
 
 and the modified distribution is the m-fold composition.  For finite m the
 distribution is non-degenerate (drawing from it consumes one extra
-pseudorandom categorical draw, stream PLAIN); as m→∞ it collapses to a point
-mass and attains the maximal strength (Thm 3.3 — validated numerically in
-tests).  Detection statistic: y_t = (g_1(w_t),…,g_m(w_t)) ∈ {0,1}^m.
+pseudorandom categorical draw — a counter-PRF Gumbel race on stream
+``STREAM_PLAIN + stream``); as m→∞ it collapses to a point mass and attains
+the maximal strength (Thm 3.3 — validated numerically in tests).
+Detection statistic: y_t = (g_1(w_t),…,g_m(w_t)) ∈ {0,1}^m.
+
+PRF + padded-lane canon: the g-bits come from the integer counter PRF
+(``prf.kernel_gbit`` on counter ``w + V·l`` — the exact program of the
+Pallas tournament kernels), so host sampling, detection recovery, the jnp
+kernel mirrors and the fused ``spec_verify_wm`` tournament tail all agree
+bit-exactly.  Every vocab-extent reduction (the per-round mass, the input
+normalizer) runs at the 128-lane padded extent ``pad128(V)`` — XLA float
+reductions are not bit-invariant to the reduced extent, and the kernels
+compute on lane-padded rows (see ``base`` module docstring).
 """
 from __future__ import annotations
 
@@ -20,7 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import prf
-from repro.core.watermark.base import Decoder, register
+from repro.core.watermark.base import (Decoder, EPS, FusedTail, pad128,
+                                       register)
 
 
 def tournament_layer(probs, g):
@@ -29,42 +40,107 @@ def tournament_layer(probs, g):
     return probs * (1.0 + g - mass_one)
 
 
+def tournament_padded(probs, g_seed, *, m: int, vocab: int):
+    """The canonical m-round tournament of one row, at padded-lane extent.
+
+    probs: (V,) nonnegative, any scale (normalized internally — the
+    operator is not scale-invariant); g_seed: u32 counter-PRF seed.
+    Returns the (vp,) f32 tournament distribution (zero on pad lanes).
+    Bit-exact with the in-kernel tournament branch of ``spec_verify_wm``
+    and the ``tournament_kernel`` round body.
+    """
+    vp = pad128(vocab)
+    p = jnp.zeros((vp,), jnp.float32).at[:vocab].set(
+        probs.astype(jnp.float32))
+    z = jnp.sum(p)
+    p = p / jnp.maximum(z, EPS)
+    w = jnp.arange(vp, dtype=jnp.uint32)
+
+    def body(i, p):
+        g = prf.kernel_gbit(g_seed, w + jnp.uint32(vocab) * i.astype(
+            jnp.uint32))
+        mass_one = jnp.sum(p * g)
+        return p * (1.0 + g - mass_one)
+
+    return jax.lax.fori_loop(0, m, body, p)
+
+
+def race_padded(dist_vp, seed, *, vocab: int):
+    """Counter-PRF Gumbel race over a lane-padded row; pad lanes and
+    zero-mass tokens are excluded.  Bit-exact with the in-kernel race."""
+    vp = dist_vp.shape[-1]
+    w = jnp.arange(vp, dtype=jnp.uint32)
+    uv = prf.kernel_uniform(seed, w)
+    score = jnp.log(uv) / jnp.maximum(dist_vp, EPS)
+    score = jnp.where((dist_vp > 0) & (w < vocab), score, -jnp.inf)
+    return jnp.argmax(score).astype(jnp.int32)
+
+
+def argmax_padded(dist_vp, *, vocab: int):
+    """Deterministic winner of a lane-padded row (m→∞ limit)."""
+    w = jnp.arange(dist_vp.shape[-1], dtype=jnp.uint32)
+    return jnp.argmax(jnp.where(w < vocab, dist_vp, -jnp.inf)).astype(
+        jnp.int32)
+
+
+def token_stat(seed, token, vocab, *, m=30):
+    """y_t ∈ {0,1}^m of one token from its per-(context, stream) seed —
+    O(m) (no (m, V) g-matrix materialization)."""
+    layers = jnp.arange(m, dtype=jnp.uint32)
+    return prf.kernel_gbit(seed, token.astype(jnp.uint32)
+                           + jnp.uint32(vocab) * layers)
+
+
 def modified_dist(probs, key, ctx_hash, stream=prf.STREAM_DRAFT, *, m=30):
-    g = prf.synthid_gbits(key, ctx_hash, stream, m, probs.shape[-1])
-
-    def body(p, g_i):
-        return tournament_layer(p, g_i), None
-
-    out, _ = jax.lax.scan(body, probs.astype(jnp.float32), g)
-    return out
+    """P_ζ of one (V,) row (padded-lane canon, sliced back to V)."""
+    V = probs.shape[-1]
+    g_seed = prf.wm_seed(key, ctx_hash, stream)
+    return tournament_padded(probs, g_seed, m=m, vocab=V)[..., :V]
 
 
 def sample(probs, key, ctx_hash, stream=prf.STREAM_DRAFT, *, m=30):
-    """Returns (token, y (m,)) — the g-bits of the selected token."""
-    g = prf.synthid_gbits(key, ctx_hash, stream, m, probs.shape[-1])
-
-    def body(p, g_i):
-        return tournament_layer(p, g_i), None
-
-    pz, _ = jax.lax.scan(body, probs.astype(jnp.float32), g)
-    # finite-m draw needs one extra (still pseudorandom, recoverable) coin
-    u = prf.uniform_from(key, ctx_hash, prf.STREAM_PLAIN + stream)
-    cdf = jnp.cumsum(pz / jnp.maximum(pz.sum(), 1e-30))
-    tok = jnp.searchsorted(cdf, u)
-    tok = jnp.minimum(tok, probs.shape[-1] - 1)
-    return tok, g[:, tok]
+    """Returns (token, y (m,)) — the g-bits of the selected token.  The
+    finite-m draw consumes one extra (still pseudorandom, recoverable)
+    counter-PRF race coin on ``STREAM_PLAIN + stream``."""
+    V = probs.shape[-1]
+    g_seed = prf.wm_seed(key, ctx_hash, stream)
+    draw_seed = prf.wm_seed(key, ctx_hash, prf.STREAM_PLAIN + stream)
+    pz = tournament_padded(probs, g_seed, m=m, vocab=V)
+    tok = race_padded(pz, draw_seed, vocab=V)
+    return tok, token_stat(g_seed, tok, V, m=m)
 
 
 def recover_stats(tokens, key, ctx_hashes, stream, vocab: int, *, m=30):
     """y_t ∈ {0,1}^m recovered at detection time. Returns (..., m)."""
     def one(tok, ch):
-        g = prf.synthid_gbits(key, ch, stream, m, vocab)
-        return g[:, tok]
+        return token_stat(prf.wm_seed(key, ch, stream), tok, vocab, m=m)
 
     flat_t = tokens.reshape(-1)
     flat_c = ctx_hashes.reshape(-1)
     ys = jax.vmap(one)(flat_t, flat_c)
     return ys.reshape(tokens.shape + (m,))
+
+
+def _draft_sampler(probs, wm_seeds, draw_seeds, plain_seeds, seen, *,
+                   m: int, degenerate: bool):
+    """Batched fused draft sampling: tournament + race (or argmax in the
+    degenerate limit) for unseen contexts, raw-row plain race on repeated
+    ones — one batched race total, bit-identical to the per-row ``sample``
+    path with the seen fallback."""
+    V = probs.shape[-1]
+    vp = pad128(V)
+    pz = jax.vmap(lambda p, s: tournament_padded(p, s, m=m, vocab=V))(
+        probs, wm_seeds)                                       # (B, vp)
+    qpad = jnp.zeros(probs.shape[:-1] + (vp,), jnp.float32).at[
+        ..., :V].set(probs.astype(jnp.float32))
+    if degenerate:
+        tok_wm = jax.vmap(lambda d: argmax_padded(d, vocab=V))(pz)
+        tok_pl = jax.vmap(lambda d, s: race_padded(d, s, vocab=V))(
+            qpad, plain_seeds)
+        return jnp.where(seen, tok_pl, tok_wm)
+    dist = jnp.where(seen[:, None], qpad, pz)
+    seeds = jnp.where(seen, plain_seeds, draw_seeds)
+    return jax.vmap(lambda d, s: race_padded(d, s, vocab=V))(dist, seeds)
 
 
 @register("synthid")
@@ -76,6 +152,11 @@ def make(m: int = 30, **kw) -> Decoder:
         recover_stats=partial(recover_stats, m=m),
         stat_dim=m,
         degenerate=False,
+        flat_stat=False,
+        token_stat=partial(token_stat, m=m),
+        fused_tail=FusedTail(kind="tournament", m=m, stat_dim=m,
+                             degenerate=False),
+        draft_sampler=partial(_draft_sampler, m=m, degenerate=False),
     )
 
 
@@ -84,15 +165,18 @@ def make_inf(m: int = 30, **kw) -> Decoder:
     """m→∞ limit, implemented per the paper's App. C.1: run m=30 rounds and
     collapse the remaining mass onto the argmax token (one-hot)."""
     def dist(probs, key, ctx_hash, stream=prf.STREAM_DRAFT):
-        pz = modified_dist(probs, key, ctx_hash, stream, m=m)
-        tok = jnp.argmax(pz, axis=-1)
-        return jax.nn.one_hot(tok, probs.shape[-1], dtype=jnp.float32)
+        V = probs.shape[-1]
+        pz = tournament_padded(probs, prf.wm_seed(key, ctx_hash, stream),
+                               m=m, vocab=V)
+        tok = argmax_padded(pz, vocab=V)
+        return jax.nn.one_hot(tok, V, dtype=jnp.float32)
 
     def smp(probs, key, ctx_hash, stream=prf.STREAM_DRAFT):
-        pz = modified_dist(probs, key, ctx_hash, stream, m=m)
-        tok = jnp.argmax(pz, axis=-1)
-        g = prf.synthid_gbits(key, ctx_hash, stream, m, probs.shape[-1])
-        return tok, g[:, tok]
+        V = probs.shape[-1]
+        g_seed = prf.wm_seed(key, ctx_hash, stream)
+        pz = tournament_padded(probs, g_seed, m=m, vocab=V)
+        tok = argmax_padded(pz, vocab=V)
+        return tok, token_stat(g_seed, tok, V, m=m)
 
     return Decoder(
         name="synthid-inf",
@@ -101,4 +185,9 @@ def make_inf(m: int = 30, **kw) -> Decoder:
         recover_stats=partial(recover_stats, m=m),
         stat_dim=m,
         degenerate=True,
+        flat_stat=False,
+        token_stat=partial(token_stat, m=m),
+        fused_tail=FusedTail(kind="tournament", m=m, stat_dim=m,
+                             degenerate=True),
+        draft_sampler=partial(_draft_sampler, m=m, degenerate=True),
     )

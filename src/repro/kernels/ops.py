@@ -46,28 +46,38 @@ def spec_verify(p, q, draft_tokens, u, resid_seeds, *,
 
 
 def _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds, plain_seeds,
-                          seen, live, *, interpret: bool | None):
+                          seen, live, draw_seeds, *, tail,
+                          interpret: bool | None):
     """Single-shard body of ``spec_verify_wm`` (grid spans the local batch)."""
     if interpret is None and _interpret_default():
         from repro.kernels import ref as _ref
         return _ref.spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds,
-                                       plain_seeds, seen, live)
+                                       plain_seeds, seen, live, draw_seeds,
+                                       tail=tail)
     interpret = False if interpret is None else interpret
     return spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds,
-                                 plain_seeds, seen, live,
-                                 interpret=interpret)
+                                 plain_seeds, seen, live, draw_seeds,
+                                 tail=tail, interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("interpret", "mesh", "batch_axes"))
+@partial(jax.jit, static_argnames=("interpret", "mesh", "batch_axes",
+                                   "tail"))
 def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
-                   live=None, *, interpret: bool | None = None, mesh=None,
-                   batch_axes: tuple | None = None):
+                   live=None, draw_seeds=None, *,
+                   interpret: bool | None = None, mesh=None,
+                   batch_axes: tuple | None = None, tail=None):
     """Fused watermarked verification tail.  On TPU this stages the Mosaic
     kernel; on CPU the default is the *bit-exact jnp mirror* of the kernel
     program (``ref.spec_verify_wm_ref`` — parity enforced by tests), because
     the Pallas interpreter walks the (B,) grid serially and is ~8x slower
     than the XLA-compiled mirror.  Pass ``interpret=True`` to force the
     interpreter (kernel validation).
+
+    ``tail`` is the scheme's ``watermark.base.FusedTail`` declaration
+    (static; default = the Gumbel race).  kind="tournament" tails run the
+    in-kernel m-round SynthID tournament and consume ``draw_seeds``
+    (B, K+1) finite-m draw coins; the 4th output is then the emitted
+    token's (B, m) g-bit statistics instead of the (B,) race uniform.
 
     ``live`` (optional, (B,) bool/int) is the continuous-batching slot
     mask: rows with live == 0 (drained serving slots) skip the whole
@@ -81,15 +91,20 @@ def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
     batch must divide the axes' size."""
     if mesh is None or not batch_axes:
         return _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds,
-                                     plain_seeds, seen, live,
-                                     interpret=interpret)
+                                     plain_seeds, seen, live, draw_seeds,
+                                     tail=tail, interpret=interpret)
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+    B, K1 = wm_seeds.shape
     if live is None:
-        live = jnp.ones((p.shape[0],), jnp.int32)
+        live = jnp.ones((B,), jnp.int32)
+    if draw_seeds is None:
+        assert tail is None or not tail.needs_draw_seeds, tail
+        draw_seeds = jnp.zeros((B, K1), jnp.uint32)
     spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
-    fn = partial(_spec_verify_wm_local, interpret=interpret)
-    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 8,
+    fn = partial(_spec_verify_wm_local, tail=tail, interpret=interpret)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 9,
                      out_specs=(spec,) * 4, check_rep=False)(
-        p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, live)
+        p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, live,
+        draw_seeds)

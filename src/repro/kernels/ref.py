@@ -23,19 +23,26 @@ def gumbel_argmax_ref(probs, seeds):
 
 
 def tournament_ref(probs, seeds, *, m: int = 30):
-    """probs (B,V), seeds (B,) -> m-round tournament distribution (B,V)."""
+    """probs (B,V), seeds (B,) -> m-round tournament distribution (B,V).
+
+    Runs at the 128-lane padded extent (zero pad lanes), matching the
+    kernel's reduction extent — XLA float reductions are not bit-invariant
+    to the reduced extent, so the mirror must pad exactly like the kernel
+    does.  Unlike ``synthid.tournament_padded`` this applies the operator
+    to the row as-is (no normalization), mirroring ``tournament_kernel``."""
     B, V = probs.shape
-    w = jnp.arange(V, dtype=jnp.uint32)
+    vp = -(-V // 128) * 128
+    w = jnp.arange(vp, dtype=jnp.uint32)
 
     def one(p, s):
-        p = p.astype(jnp.float32)
+        p = jnp.zeros((vp,), jnp.float32).at[:V].set(p.astype(jnp.float32))
 
         def body(i, p):
             g = prf.kernel_gbit(s, w + jnp.uint32(V) * jnp.uint32(i))
             mass = jnp.sum(p * g)
             return p * (1.0 + g - mass)
 
-        return jax.lax.fori_loop(0, m, body, p)
+        return jax.lax.fori_loop(0, m, body, p)[:V]
 
     return jax.vmap(one)(probs, seeds.astype(jnp.uint32))
 
@@ -73,11 +80,20 @@ def spec_verify_ref(p, q, draft_tokens, u, resid_seeds):
 
 
 def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
-                       live=None):
+                       live=None, draw_seeds=None, *, tail=None):
     """Mirror of spec_verify_wm_kernel (full watermarked Alg. 1 tail);
     see its docstring.  p: (B, K+1, V), q: (B, K, V).  ``live`` (optional,
     (B,)): rows with live == 0 return the kernel's zero-initialized outputs
-    (drained continuous-batching slots)."""
+    (drained continuous-batching slots).  ``tail`` selects the scheme's
+    emitted-token branch (default: Gumbel race); kind="tournament" runs
+    the m-round SynthID tournament at the 128-lane padded extent — the
+    exact reduction extent of the kernel — via the canonical
+    ``synthid.tournament_padded`` math, and returns the emitted token's
+    m g-bits as the 4th output."""
+    from repro.core.watermark import synthid as _synthid
+    from repro.core.watermark.base import FusedTail
+    if tail is None:
+        tail = FusedTail(kind="race", stat_dim=1)
     B, K1, V = p.shape
     K = K1 - 1
     p = p.astype(jnp.float32)
@@ -93,9 +109,12 @@ def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
     p_s = jnp.take_along_axis(p, slot[:, None, None], axis=1)[:, 0]
     q_ext = jnp.concatenate([q, jnp.zeros((B, 1, V), q.dtype)], axis=1)
     q_s = jnp.take_along_axis(q_ext, slot[:, None, None], axis=1)[:, 0]
-    eff = jnp.where(seen != 0, plain_seeds.astype(jnp.uint32),
-                    wm_seeds.astype(jnp.uint32))
-    seed_s = jnp.take_along_axis(eff, slot[:, None], axis=1)[:, 0]
+    seen_s = jnp.take_along_axis(seen.astype(jnp.int32), slot[:, None],
+                                 axis=1)[:, 0]
+    wm_s = jnp.take_along_axis(wm_seeds.astype(jnp.uint32), slot[:, None],
+                               axis=1)[:, 0]
+    pl_s = jnp.take_along_axis(plain_seeds.astype(jnp.uint32),
+                               slot[:, None], axis=1)[:, 0]
     r = jnp.maximum(p_s - q_s, 0.0)                     # bonus dist at slot K
     w = jnp.arange(V, dtype=jnp.uint32)
 
@@ -106,11 +125,41 @@ def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
         tok = jnp.argmax(score).astype(jnp.int32)
         return tok, uv[tok]
 
-    etok, eu = jax.vmap(race)(r, seed_s)
+    if tail.kind == "race":
+        seed_s = jnp.where(seen_s != 0, pl_s, wm_s)
+        etok, estat = jax.vmap(race)(r, seed_s)
+    else:                           # kind == "tournament" (SynthID)
+        m = tail.m
+        if draw_seeds is None:
+            # zero seeds would silently correlate every row's finite-m
+            # draw — only degenerate tournaments may omit them (the
+            # kernel path asserts identically)
+            assert not tail.needs_draw_seeds, tail
+            draw_seeds = jnp.zeros((B, K1), jnp.uint32)
+        dw_s = jnp.take_along_axis(draw_seeds.astype(jnp.uint32),
+                                   slot[:, None], axis=1)[:, 0]
+
+        def tourney(r_row, sn, g_seed, dw, plc):
+            pz = _synthid.tournament_padded(r_row, g_seed, m=m, vocab=V)
+            vp = pz.shape[-1]
+            rn = jnp.zeros((vp,), jnp.float32).at[:V].set(r_row)
+            rn = rn / jnp.maximum(jnp.sum(rn), 1e-30)
+            race_dist = jnp.where(sn != 0, rn, pz)
+            race_seed = jnp.where(sn != 0, plc, dw)
+            race_tok = _synthid.race_padded(race_dist, race_seed, vocab=V)
+            if tail.degenerate:
+                tok = jnp.where(sn != 0, race_tok,
+                                _synthid.argmax_padded(pz, vocab=V))
+            else:
+                tok = race_tok
+            return tok, _synthid.token_stat(g_seed, tok, V, m=m)
+
+        etok, estat = jax.vmap(tourney)(r, seen_s, wm_s, dw_s, pl_s)
     if live is not None:
         lv = live.astype(bool)
         n_acc = jnp.where(lv, n_acc, 0)
         prefix = jnp.where(lv[:, None], prefix, 0)
         etok = jnp.where(lv, etok, 0)
-        eu = jnp.where(lv, eu, 0.0)
-    return n_acc, prefix, etok, eu
+        estat = jnp.where(lv if estat.ndim == 1 else lv[:, None], estat,
+                          0.0)
+    return n_acc, prefix, etok, estat

@@ -15,14 +15,25 @@ tokens and the pseudorandom acceptance coins u = G(zeta^R):
 Everything after the two model calls of a speculative step fuses into one
 VMEM-resident pass over the (K, V) probability block.
 
-``spec_verify_wm`` extends this into the full watermarked tail of Alg. 1:
-per sequence row it additionally samples the *emitted* extra token — the
-watermarked residual  argmax_w log(U_w)/(p_w − q_w)_+  at the first
-rejected slot, or the watermarked bonus  argmax_w log(U_w)/p_w  when all
-K drafts are accepted — selecting the PRF stream in-kernel: repeated
-contexts (Hu et al.'s ``seen`` mask) race with the non-watermark stream
-seed instead of the ζ^T one.  Exactly one (V,)-sized race runs per row,
-replacing the engine's former O(K·V)-per-row residual materialization.
+``spec_verify_wm`` extends this into the full watermarked tail of Alg. 1,
+with a scheme-pluggable emitted-token branch (``FusedTail``):
+
+- kind="race" (Gumbel-max / plain): one watermarked Gumbel race over the
+  residual  argmax_w log(U_w)/(p_w − q_w)_+  at the first rejected slot,
+  or over the bonus row p_K when all K drafts are accepted;
+- kind="tournament" (SynthID): the residual/bonus row is normalized and
+  driven through the m-round tournament operator *in VMEM* (reusing the
+  ``tournament_kernel`` round body and in-kernel g-bit PRF), then the
+  emitted token is drawn by a counter-PRF race (finite m) or argmax
+  (degenerate m→∞ limit), and its m g-bit detection statistics are
+  emitted alongside.
+
+Either way the PRF stream switches in-kernel: repeated contexts (Hu et
+al.'s ``seen`` mask) draw with the non-watermark stream seed instead of
+the ζ^T one.  Exactly one (V,)-sized race runs per row, replacing the
+engine's former O(K·V)-per-row residual materialization — and for
+SynthID the m tournament rounds touch HBM once (one read of the
+residual row) instead of materializing m (V,) vectors.
 
 Both kernels are written against the *local* batch: on a mesh, the
 ``ops.spec_verify_wm`` wrapper shard_maps the call over the dp axes, so
@@ -38,6 +49,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels.gumbel_argmax import _uniform
+from repro.kernels.tournament import _gbit
 
 
 def _kernel(p_ref, q_ref, tok_ref, u_ref, seed_ref,
@@ -116,16 +128,17 @@ def spec_verify_kernel(p, q, draft_tokens, u, resid_seeds, *,
     return n_acc[:, 0], acc, rtok[:, 0], ru[:, 0]
 
 
-def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, seen_ref,
-               live_ref, nacc_ref, acc_ref, etok_ref, eu_ref, *, K: int,
-               vocab: int):
+def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, dws_ref,
+               seen_ref, live_ref, nacc_ref, acc_ref, etok_ref, estat_ref,
+               *, K: int, vocab: int, kind: str, m: int, degenerate: bool,
+               stat_dim: int):
     # Zero-init so non-live (drained continuous-batching slot) rows emit
     # defined outputs; the whole verification/race body is then predicated
     # off for them — a drained row costs no gather/race work on TPU.
     nacc_ref[0] = jnp.zeros((1,), jnp.int32)
     acc_ref[0] = jnp.zeros((K,), jnp.int32)
     etok_ref[0] = jnp.zeros((1,), jnp.int32)
-    eu_ref[0] = jnp.zeros((1,), jnp.float32)
+    estat_ref[0] = jnp.zeros((stat_dim,), jnp.float32)
 
     @pl.when(live_ref[0, 0] != 0)
     def _():
@@ -135,6 +148,7 @@ def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, seen_ref,
         u = u_ref[0].astype(jnp.float32)    # (K,) acceptance coins
         wms = wms_ref[0].astype(jnp.uint32)  # (K+1,) zeta^T stream seeds
         pls = pls_ref[0].astype(jnp.uint32)  # (K+1,) non-watermark seeds
+        dws = dws_ref[0].astype(jnp.uint32)  # (K+1,) finite-m draw seeds
         seen = seen_ref[0]                  # (K+1,) int32 repeated-ctx mask
         kv, vp = q.shape
         w2 = jax.lax.broadcasted_iota(jnp.int32, (kv, vp), 1)
@@ -147,11 +161,10 @@ def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, seen_ref,
         acc_ref[0] = prefix
         nacc_ref[0] = n_acc.astype(jnp.int32)[None]
 
-        # the single emitted extra token: slot n_acc in [0, K].  For
-        # n_acc < K the race runs over (p − q)_+ (first-rejection residual);
-        # for n_acc == K the q mask selects nothing, so r == p_K (bonus).
-        # The Gumbel-max race is scale-invariant, so the residual needs no
-        # normalization pass.
+        # the single emitted extra token comes from slot n_acc in [0, K]:
+        # for n_acc < K its base row is (p − q)_+ (first-rejection
+        # residual); for n_acc == K the q mask selects nothing, so
+        # r == p_K (bonus).
         slot = n_acc
         rows_p = jax.lax.broadcasted_iota(jnp.int32, (K + 1, 1), 0)
         p_s = jnp.sum(p * (rows_p == slot).astype(jnp.float32),
@@ -159,21 +172,70 @@ def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, seen_ref,
         rows_q = jax.lax.broadcasted_iota(jnp.int32, (kv, 1), 0)
         q_s = jnp.sum(q * (rows_q == slot).astype(jnp.float32),
                       axis=0, keepdims=True)
-        eff = jnp.where(seen != 0, pls, wms)           # (K+1,) stream switch
-        seed_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, eff, jnp.uint32(0)))
+        seen_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, seen, 0))
+        wm_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, wms, jnp.uint32(0)))
+        pl_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, pls, jnp.uint32(0)))
         r = jnp.maximum(p_s - q_s, 0.0)
         wv = jax.lax.broadcasted_iota(jnp.uint32, (1, vp), 1)
-        uv = _uniform(seed_s, wv)
-        score = jnp.log(uv) / jnp.maximum(r, 1e-30)
-        score = jnp.where((r > 0) & (wv < vocab), score, -jnp.inf)
-        etok = jnp.argmax(score).astype(jnp.int32)     # flat over (1, Vp)
-        etok_ref[0] = etok[None]
-        eu_ref[0] = jnp.sum(uv * (wv == etok.astype(jnp.uint32))
-                            .astype(jnp.float32))[None]
+
+        if kind == "race":
+            # Gumbel-max race over the raw row (scale-invariant, so the
+            # residual needs no normalization pass); repeated contexts
+            # switch to the non-watermark stream seed.
+            seed_s = jnp.where(seen_s != 0, pl_s, wm_s)
+            uv = _uniform(seed_s, wv)
+            score = jnp.log(uv) / jnp.maximum(r, 1e-30)
+            score = jnp.where((r > 0) & (wv < vocab), score, -jnp.inf)
+            etok = jnp.argmax(score).astype(jnp.int32)  # flat over (1, Vp)
+            etok_ref[0] = etok[None]
+            estat_ref[0] = jnp.sum(
+                uv * (wv == etok.astype(jnp.uint32)).astype(jnp.float32)
+                )[None]
+        else:                       # kind == "tournament" (SynthID)
+            # the tournament operator is not scale-invariant: normalize
+            # the row at the padded-lane extent (the canon every jnp
+            # mirror and the host decoder follow), then run the m rounds
+            # VMEM-resident with the tournament_kernel round body.
+            dw_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, dws,
+                                     jnp.uint32(0)))
+            z = jnp.sum(r)
+            rn = r / jnp.maximum(z, 1e-30)             # (1, Vp)
+
+            def round_body(i, pz):
+                g = _gbit(wm_s, wv + jnp.uint32(vocab) * i.astype(
+                    jnp.uint32))
+                mass_one = jnp.sum(pz * g)
+                return pz * (1.0 + g - mass_one)
+
+            pz = jax.lax.fori_loop(0, m, round_body, rn)
+            # repeated contexts draw from the *raw* (un-tournamented) row
+            # with the plain seed; the finite-m tournament draw is a
+            # counter-PRF race, the m→∞ limit an argmax
+            race_dist = jnp.where(seen_s != 0, rn, pz)
+            race_seed = jnp.where(seen_s != 0, pl_s, dw_s)
+            uv = _uniform(race_seed, wv)
+            score = jnp.log(uv) / jnp.maximum(race_dist, 1e-30)
+            score = jnp.where((race_dist > 0) & (wv < vocab), score,
+                              -jnp.inf)
+            race_tok = jnp.argmax(score).astype(jnp.int32)
+            if degenerate:
+                arg_tok = jnp.argmax(
+                    jnp.where(wv < vocab, pz, -jnp.inf)).astype(jnp.int32)
+                etok = jnp.where(seen_s != 0, race_tok, arg_tok)
+            else:
+                etok = race_tok
+            etok_ref[0] = etok[None]
+            # m g-bit detection statistics of the emitted token under the
+            # zeta^T g-seed (counter tok + V*l — matches recover_stats)
+            li = jax.lax.broadcasted_iota(jnp.uint32, (1, stat_dim), 1)
+            g_tok = _gbit(wm_s, etok.astype(jnp.uint32)
+                          + jnp.uint32(vocab) * li)
+            estat_ref[0] = g_tok[0]
 
 
 def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
-                          seen, live=None, *, interpret: bool = False):
+                          seen, live=None, draw_seeds=None, *, tail=None,
+                          interpret: bool = False):
     """Fused watermarked verification tail of Alg. 1 (accept/reject +
     residual-or-bonus sampling) — one VMEM pass per sequence row.
 
@@ -183,25 +245,39 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
     counter-PRF seeds for the ζ^T and non-watermark streams; seen: (B, K+1)
     repeated-context mask (nonzero -> fall back to the plain stream).
 
+    ``tail`` (a ``watermark.base.FusedTail``, default the Gumbel race)
+    selects the scheme's emitted-token branch; kind="tournament" tails
+    additionally consume ``draw_seeds`` (B, K+1) — the finite-m
+    categorical draw coins (ignored by races and degenerate tournaments).
+
     ``live`` (optional, (B,) bool/int): slot mask for continuous batching —
     rows with live == 0 (drained serving slots) skip the whole verification
     body under ``pl.when`` and return all-zero outputs.  None = all rows
     live.
 
-    Returns (n_acc (B,), accepted (B, K) int32, extra_tok (B,),
-    extra_u (B,)) where extra_tok is the emitted slot-n_acc token (residual
-    on first rejection, bonus when all accepted) and extra_u its PRF
-    uniform (the Gumbel detection statistic)."""
+    Returns (n_acc (B,), accepted (B, K) int32, extra_tok (B,), extra_stat)
+    where extra_tok is the emitted slot-n_acc token (residual on first
+    rejection, bonus when all accepted) and extra_stat its detection
+    statistic — the PRF race uniform (B,) for kind="race", the m g-bits
+    (B, m) of the emitted token for kind="tournament"."""
+    from repro.core.watermark.base import FusedTail
+    if tail is None:
+        tail = FusedTail(kind="race", stat_dim=1)
     B, K1, V = p.shape
     K = K1 - 1
     assert q.shape == (B, K, V), (p.shape, q.shape)
     if live is None:
         live = jnp.ones((B,), jnp.int32)
+    if draw_seeds is None:
+        assert not tail.needs_draw_seeds, tail
+        draw_seeds = jnp.zeros((B, K1), jnp.uint32)
     vp = -(-V // 128) * 128
     pp = jnp.zeros((B, K1, vp), p.dtype).at[:, :, :V].set(p)
     qp = jnp.zeros((B, K, vp), q.dtype).at[:, :, :V].set(q)
     outs = pl.pallas_call(
-        functools.partial(_wm_kernel, K=K, vocab=V),
+        functools.partial(_wm_kernel, K=K, vocab=V, kind=tail.kind,
+                          m=tail.m, degenerate=tail.degenerate,
+                          stat_dim=tail.stat_dim),
         grid=(B,),
         in_specs=[
             pl.BlockSpec((1, K1, vp), lambda i: (i, 0, 0)),
@@ -211,23 +287,27 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
+            pl.BlockSpec((1, K1), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, K), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
-            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, tail.stat_dim), lambda i: (i, 0)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
             jax.ShapeDtypeStruct((B, K), jnp.int32),
             jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, tail.stat_dim), jnp.float32),
         ],
         interpret=interpret,
     )(pp, qp, draft_tokens.astype(jnp.int32), u.astype(jnp.float32),
       wm_seeds.astype(jnp.uint32), plain_seeds.astype(jnp.uint32),
-      seen.astype(jnp.int32), live.astype(jnp.int32).reshape(B, 1))
-    n_acc, acc, etok, eu = outs
-    return n_acc[:, 0], acc, etok[:, 0], eu[:, 0]
+      draw_seeds.astype(jnp.uint32), seen.astype(jnp.int32),
+      live.astype(jnp.int32).reshape(B, 1))
+    n_acc, acc, etok, estat = outs
+    if tail.kind == "race":
+        estat = estat[:, 0]
+    return n_acc[:, 0], acc, etok[:, 0], estat

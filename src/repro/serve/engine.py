@@ -13,10 +13,17 @@ function over fixed shapes:
   4. first-rejection residual sampling from the watermarked
      ``(P−Q)_{+,ζ^T}``, bonus token from ``P_{ζ^T}`` when all accepted —
      steps 3–4 run fused in the ``spec_verify_wm`` Pallas kernel (one VMEM
-     pass per row, a single (V,) Gumbel race for the emitted extra token)
-     for gumbel/none watermarks, and on a jnp fallback for synthid;
+     pass per row: a single (V,) Gumbel race for the emitted extra token,
+     or the VMEM-resident m-round SynthID tournament) for every scheme
+     that declares a fused tail — dispatch is capability-driven off the
+     ``Decoder`` registry (``fused_tail`` / ``draft_sampler`` /
+     ``token_stat`` / PRF-stream declarations), never off the watermark
+     name;
   5. per-sequence commit: cache positions advance by ``out_len``;
-     recurrent states roll back by checkpoint selection.
+     recurrent states roll back by checkpoint selection.  Every emitted
+     slot also records its ``(stat_dim,)`` detection statistics under the
+     draft and target streams (``StepOutput.y_draft``/``y_target``), so
+     served records feed the detectors without a recovery pass.
 
 ``generate`` is device-resident: the multi-step loop, including the
 scatter-commit of every step's outputs into preallocated buffers, runs as
@@ -40,8 +47,9 @@ by ``tests/test_engine_sharded.py`` on a forced 8-device CPU mesh.
 ``generate`` also supports chained resume: the returned ``state`` can be
 passed back (``generate(..., state=res.state)``) and continues exactly
 where the previous call stopped — slot-0 metadata (context hash, coin,
-masked flag) is carried in the state (``last_ctx``/``last_u``/
-``last_msk``), never recomputed from the prompt tail.
+masked flag, detection stats) is carried in the state (``last_ctx``/
+``last_u``/``last_msk``/``last_yd``/``last_yt``), never recomputed from
+the prompt tail.
 
 **Per-slot stopping / continuous batching**: the loop's stopping condition
 is per-sequence — ``n_tokens`` may be a per-slot target vector and
@@ -71,9 +79,10 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
-from repro.core import prf, speculative as spec
+from repro.core import prf
 from repro.core import watermark as _wm  # noqa: F401  (register decoders)
-from repro.core.watermark.base import Decoder, get_decoder
+from repro.core.watermark.base import (Decoder, FusedTail, get_decoder,
+                                       race_argmax, race_draft_sampler)
 from repro.kernels import ops as KOPS
 from repro.models import model as M
 from repro.sharding import rules as SHR
@@ -95,54 +104,61 @@ class SpecConfig:
 
 
 def use_fused(scfg: SpecConfig) -> bool:
-    """The fused Pallas tail implements the Gumbel-max race (gumbel / none);
-    synthid's tournament tail stays on the jnp path."""
+    """Capability dispatch: the fused Pallas tail runs for every scheme
+    whose decoder declares a ``fused_tail`` (Gumbel race, SynthID
+    tournament, plain sampling).  ``fused="on"`` raises only for schemes
+    with no registered fused tail."""
     if scfg.fused == "off":
         return False
-    fusable = scfg.watermark in ("gumbel", "none")
+    dec = make_decoder(scfg)
+    fusable = dec.fused_tail is not None
     if scfg.fused == "on":
         if not fusable:
             raise ValueError(
                 f"fused='on' unsupported for watermark={scfg.watermark!r}: "
-                "the fused tail races Gumbel-max, which would silently "
-                "replace the tournament watermark")
+                f"decoder {dec.name!r} registers no fused verification "
+                "tail (Decoder.fused_tail is None)")
         return True
     return fusable
 
 
-def _race_sample(probs, seed):
-    """Categorical sample as a Gumbel-max race with counter-PRF uniforms —
-    bit-compatible with the in-kernel race (same seed -> same token)."""
-    w = jnp.arange(probs.shape[-1], dtype=jnp.uint32)
-    uv = prf.kernel_uniform(seed, w)
-    score = jnp.log(uv) / jnp.maximum(probs, EPS)
-    score = jnp.where(probs > 0, score, -jnp.inf)
-    return jnp.argmax(score).astype(jnp.int32)
+# kept as the engine-local alias of the shared counter-PRF race (schemes
+# and kernels agree bit-exactly on it; see watermark.base.race_argmax)
+_race_sample = race_argmax
 
 
-def _plain_decoder() -> Decoder:
+def _plain_decoder(m: int = 30, **kw) -> Decoder:
     """No watermark: categorical sampling with non-recoverable randomness
-    (a Gumbel-max race on the plain stream, so the fused kernel tail can
-    reproduce it from the scalar seed)."""
+    (a Gumbel-max race on offset plain streams, so the fused kernel tail
+    can reproduce it from the scalar seed).  The offset streams are part
+    of the capability declaration — the engine derives all seeds from
+    ``draft_stream``/``target_stream``, never from the scheme name."""
     def dist(probs, key, ctx_hash, stream=0):
         return probs
 
     def sample(probs, key, ctx_hash, stream=0):
         seed = prf.wm_seed(key, ctx_hash, prf.STREAM_PLAIN + stream + 13)
-        return _race_sample(probs, seed), jnp.zeros(())
+        return race_argmax(probs, seed), jnp.zeros(())
 
     def recover(tokens, key, ctx_hashes, stream, vocab):
         return jnp.zeros(tokens.shape, jnp.float32)
 
     return Decoder(name="none", modified_dist=dist, sample=sample,
-                   recover_stats=recover, stat_dim=1, degenerate=False)
+                   recover_stats=recover, stat_dim=1, degenerate=False,
+                   draft_stream=prf.STREAM_PLAIN + prf.STREAM_DRAFT + 13,
+                   target_stream=prf.STREAM_PLAIN + prf.STREAM_TARGET + 13,
+                   token_stat=None,
+                   fused_tail=FusedTail(kind="race", stat_dim=1),
+                   draft_sampler=race_draft_sampler)
 
 
 def make_decoder(scfg: SpecConfig) -> Decoder:
+    """Config → Decoder, uniformly through the registry: every factory
+    takes ``m=`` (schemes that don't need it ignore the kwarg), so no
+    name-pattern dispatch is left."""
     if scfg.watermark == "none":
-        return _plain_decoder()
-    kw = {"m": scfg.m} if scfg.watermark.startswith("synthid") else {}
-    return get_decoder(scfg.watermark, **kw)
+        return _plain_decoder(m=scfg.m)
+    return get_decoder(scfg.watermark, m=scfg.m)
 
 
 # ---------------------------------------------------------------------------
@@ -150,6 +166,26 @@ def make_decoder(scfg: SpecConfig) -> Decoder:
 # ---------------------------------------------------------------------------
 
 RECURRENT_KEYS = ("wkv", "att_shift", "ffn_shift", "conv", "ssm")
+
+
+def key_fingerprint(key) -> bytes:
+    """Stable byte fingerprint of a PRF key — tags served detection-stat
+    buffers so the pipeline never consumes them under a different key
+    (e.g. wrong-key false-positive calibration)."""
+    return np.asarray(jax.random.key_data(key)).tobytes()
+
+
+def _token_stat_batch(dec: Decoder, seeds, tokens, vocab: int):
+    """Detection statistics of committed tokens: ``tokens`` (...,) int32
+    with per-slot counter-PRF ``seeds`` (...,) u32 -> (..., stat_dim) f32.
+    Schemes without a recoverable statistic (``token_stat is None``)
+    record zeros."""
+    if dec.token_stat is None:
+        return jnp.zeros(tokens.shape + (dec.stat_dim,), jnp.float32)
+    fn = lambda sd, tk: dec.token_stat(sd, tk, vocab)   # noqa: E731
+    for _ in range(tokens.ndim):
+        fn = jax.vmap(fn)
+    return fn(seeds, tokens)
 
 
 def _is_recurrent(cfg: ModelConfig) -> bool:
@@ -187,6 +223,10 @@ def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     # per-sequence positions from the start (divergent acceptance later)
     t_cache = dict(t_cache, pos=jnp.full((B,), S0, jnp.int32))
     d_cache = dict(d_cache, pos=jnp.full((B,), S0, jnp.int32))
+    yd_seed = jax.vmap(
+        lambda ch: prf.wm_seed(key, ch, prf.STREAM_DRAFT))(ctx0)
+    yt_seed = jax.vmap(
+        lambda ch: prf.wm_seed(key, ch, prf.STREAM_TARGET))(ctx0)
     return {
         "t_cache": t_cache,
         "d_cache": d_cache,
@@ -194,10 +234,13 @@ def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         "last": first,             # (B,) committed but not yet consumed
         # slot-0 metadata of ``last`` (resume path: never recomputed from
         # the prompt tail) — the context it was sampled under, its recorded
-        # acceptance coin, and its repeated-context flag.
+        # acceptance coin, its repeated-context flag, and its detection
+        # statistics under the draft/target streams.
         "last_ctx": ctx0,
         "last_u": jax.vmap(lambda ch: prf.accept_uniform(key, ch))(ctx0),
         "last_msk": jnp.zeros((B,), bool),
+        "last_yd": _token_stat_batch(dec, yd_seed, first, tcfg.vocab),
+        "last_yt": _token_stat_batch(dec, yt_seed, first, tcfg.vocab),
         "n_committed": jnp.full((B,), S0 + 1, jnp.int32),
         "hist": hist,              # (B, H) used context hashes
         "hist_n": jnp.ones((B,), jnp.int32),
@@ -214,6 +257,7 @@ def abstract_state(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
     t_cache = dict(t_cache, pos=jax.ShapeDtypeStruct((batch,), jnp.int32))
     d_cache = dict(d_cache, pos=jax.ShapeDtypeStruct((batch,), jnp.int32))
     c = scfg.ctx_window
+    S = make_decoder(scfg).stat_dim
     sds = jax.ShapeDtypeStruct
     return {
         "t_cache": t_cache,
@@ -223,6 +267,8 @@ def abstract_state(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         "last_ctx": sds((batch,), jnp.uint32),
         "last_u": sds((batch,), jnp.float32),
         "last_msk": sds((batch,), jnp.bool_),
+        "last_yd": sds((batch, S), jnp.float32),
+        "last_yt": sds((batch, S), jnp.float32),
         "n_committed": sds((batch,), jnp.int32),
         "hist": sds((batch, scfg.history_cap), jnp.uint32),
         "hist_n": sds((batch,), jnp.int32),
@@ -238,11 +284,15 @@ class StepOutput(NamedTuple):
     u: jnp.ndarray             # (B, K) acceptance coins
     ctx_hashes: jnp.ndarray    # (B, K+1) uint32, per emitted-slot context
     masked: jnp.ndarray        # (B, K+1) bool — repeated-context positions
+    y_draft: jnp.ndarray       # (B, K+1, stat_dim) f32 — emitted-token
+    #                            detection stats under zeta^D
+    y_target: jnp.ndarray      # (B, K+1, stat_dim) f32 — under zeta^T
 
 
 def abstract_step_output(scfg: SpecConfig, batch: int) -> StepOutput:
     """ShapeDtypeStruct stand-in of a StepOutput (sharded lowering)."""
     sds, K1 = jax.ShapeDtypeStruct, scfg.K + 1
+    S = make_decoder(scfg).stat_dim
     return StepOutput(
         out_tokens=sds((batch, K1), jnp.int32),
         out_len=sds((batch,), jnp.int32),
@@ -250,7 +300,9 @@ def abstract_step_output(scfg: SpecConfig, batch: int) -> StepOutput:
         from_draft=sds((batch, K1), jnp.bool_),
         u=sds((batch, scfg.K), jnp.float32),
         ctx_hashes=sds((batch, K1), jnp.uint32),
-        masked=sds((batch, K1), jnp.bool_))
+        masked=sds((batch, K1), jnp.bool_),
+        y_draft=sds((batch, K1, S), jnp.float32),
+        y_target=sds((batch, K1, S), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -343,22 +395,29 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
     K, c = scfg.K, scfg.ctx_window
     temp = scfg.temperature
     fused = use_fused(scfg)
-    # "none" samples the tail on the plain stream the plain decoder uses;
-    # gumbel samples on ζ^T — either way one scalar seed per slot.
-    tail_wm_stream = (prf.STREAM_PLAIN + prf.STREAM_TARGET + 13
-                      if scfg.watermark == "none" else prf.STREAM_TARGET)
-    draft_wm_stream = (prf.STREAM_PLAIN + prf.STREAM_DRAFT + 13
-                       if scfg.watermark == "none" else prf.STREAM_DRAFT)
+    # the scheme declares which PRF streams its watermarked draws consume
+    # ("none" declares offset plain streams; gumbel/synthid the ζ^D/ζ^T
+    # base streams) — the engine never branches on the watermark name.
+    tail_wm_stream = dec.target_stream
+    draft_wm_stream = dec.draft_stream
+    tail_spec = dec.fused_tail
 
     def _draft_sample_fused(q_full, ctx_h, seen, key):
-        """Both the watermarked draw and the seen-fallback are Gumbel races
-        over the same q — selecting the seed first halves the race count
-        while staying bit-identical to the two-branch decoder path."""
+        """Scheme-fused draft sampling: the engine derives the per-context
+        seed vectors (watermark / finite-m draw / seen-fallback) and the
+        scheme's ``draft_sampler`` turns them into tokens — a seed-select
+        Gumbel race for race schemes, tournament + race for SynthID —
+        bit-identical to the two-branch decoder path."""
         wm = jax.vmap(lambda ch: prf.wm_seed(key, ch, draft_wm_stream))(
             ctx_h)
         pl = jax.vmap(lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 1))(
             ctx_h)
-        return jax.vmap(_race_sample)(q_full, jnp.where(seen, pl, wm))
+        if tail_spec is not None and tail_spec.needs_draw_seeds:
+            dw = jax.vmap(lambda ch: prf.wm_seed(
+                key, ch, prf.STREAM_PLAIN + draft_wm_stream))(ctx_h)
+        else:
+            dw = wm
+        return dec.draft_sampler(q_full, wm, dw, pl, seen)
 
     def step(t_params, d_params, state, key, live=None, eos_id=None):
         t_cache, d_cache = state["t_cache"], state["d_cache"]
@@ -378,7 +437,7 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
             ctx_h = prf.context_hash(window)
             seen = (_seen_in_history(hist, hist_n, ctx_h)
                     if scfg.mask_repeated else jnp.zeros((B,), bool))
-            if fused:
+            if fused and dec.draft_sampler is not None:
                 tok = _draft_sample_fused(q_full, ctx_h, seen, key)
             else:
                 tok = _wm_sample_batch(dec, q_full, key, ctx_h,
@@ -419,10 +478,13 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
 
         if fused:
             # ---- 4. fused verify + residual/bonus (Pallas) -----------------
-            # Per-slot scalar seeds for the ζ^T and non-watermark streams;
-            # the kernel gathers p/q of the drafts, computes the prefix
-            # acceptance and races the single emitted extra token in VMEM,
-            # switching to the plain-stream seed on ``seen`` contexts.
+            # Per-slot scalar seeds for the ζ^T and non-watermark streams
+            # (plus the finite-m draw coins when the scheme's tail needs
+            # them); the kernel gathers p/q of the drafts, computes the
+            # prefix acceptance and samples the single emitted extra token
+            # in VMEM — one Gumbel race or one m-round tournament per row,
+            # per the scheme's FusedTail declaration — switching to the
+            # plain-stream seed on ``seen`` contexts.
             wm_seeds = jax.vmap(jax.vmap(
                 lambda ch: prf.wm_seed(key, ch, tail_wm_stream)))(all_hashes)
             pl_r = jax.vmap(jax.vmap(
@@ -432,15 +494,21 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                 lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 3))(
                 ctx_bonus)
             plain_seeds = jnp.concatenate([pl_r, pl_b[:, None]], axis=1)
+            draw_seeds = None
+            if tail_spec.needs_draw_seeds:
+                draw_seeds = jax.vmap(jax.vmap(
+                    lambda ch: prf.wm_seed(
+                        key, ch, prf.STREAM_PLAIN + tail_wm_stream)))(
+                    all_hashes)
             axes = SHR.dp_axes(mesh, B) if mesh is not None else None
             live_i = None if live is None else live.astype(jnp.int32)
             n_acc, prefix_i, extra, _ = KOPS.spec_verify_wm(
                 p_fulls, q_fulls, draft_toks, u, wm_seeds, plain_seeds,
-                all_seen, live_i, mesh=mesh if axes else None,
-                batch_axes=axes)
+                all_seen, live_i, draw_seeds, tail=tail_spec,
+                mesh=mesh if axes else None, batch_axes=axes)
             prefix = prefix_i.astype(bool)
         else:
-            # ---- 4. jnp tail (synthid tournament / reference path) ---------
+            # ---- 4. jnp tail (decoder-generic reference path) --------------
             p_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
                 p_fulls[:, :K], draft_toks)               # (B, K)
             q_of_draft = jax.vmap(_gather_probs, in_axes=(1, 1), out_axes=1)(
@@ -450,7 +518,10 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
             prefix = jnp.cumprod(ok.astype(jnp.int32), axis=-1).astype(bool)
             n_acc = prefix.sum(axis=-1).astype(jnp.int32)  # (B,)
             all_ok = n_acc == K
-            resid = spec.residual_dist(p_fulls[:, :K], q_fulls)   # (B, K, V)
+            # raw (P−Q)_+ rows: the Gumbel race is scale-invariant and the
+            # tournament decoder normalizes internally at the padded-lane
+            # extent, so no (extent-sensitive) normalization happens here
+            resid = jnp.maximum(p_fulls[:, :K] - q_fulls, 0.0)  # (B, K, V)
             resid_toks = jax.vmap(
                 lambda pr, ch, sn: _wm_sample_batch(
                     dec, pr, key, ch, prf.STREAM_TARGET, sn,
@@ -488,6 +559,19 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
             out = jnp.where(sidx < out_len[:, None], out, 0)
         from_draft = jnp.arange(K + 1)[None, :] < n_acc[:, None]
 
+        # per-slot detection statistics of the emitted tokens under BOTH
+        # candidate streams (what the detectors consume) — O(stat_dim) per
+        # token off the counter PRF, so served records need no recovery
+        # pass.  Streams here are the detection-time constants, matching
+        # ``Decoder.recover_stats`` bit-exactly.
+        V = q_fulls.shape[-1]
+        yd_seeds = jax.vmap(jax.vmap(
+            lambda ch: prf.wm_seed(key, ch, prf.STREAM_DRAFT)))(all_hashes)
+        yt_seeds = jax.vmap(jax.vmap(
+            lambda ch: prf.wm_seed(key, ch, prf.STREAM_TARGET)))(all_hashes)
+        y_d = _token_stat_batch(dec, yd_seeds, out, V)    # (B, K+1, S)
+        y_t = _token_stat_batch(dec, yt_seeds, out, V)
+
         # ---- 6. commit -------------------------------------------------------
         t_cache = _rollback(t_cache, t_chks, t_pos0, out_len)
         # draft consumed [last, d_1..d_{K-1}]; one catch-up step consumes d_K
@@ -516,6 +600,8 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         new_last_ctx = jnp.take_along_axis(all_hashes, last_i, axis=1)[:, 0]
         new_last_u = jnp.take_along_axis(u_rec, last_i, axis=1)[:, 0]
         new_last_msk = jnp.take_along_axis(all_seen, last_i, axis=1)[:, 0]
+        new_last_yd = jax.vmap(lambda y, n: y[n])(y_d, out_len - 1)
+        new_last_yt = jax.vmap(lambda y, n: y[n])(y_t, out_len - 1)
         # history append for emitted, previously-unseen contexts — a masked
         # scatter: slot s lands at (hist_n + #adds-before-s) mod H; skipped
         # slots are routed to a trash column that is sliced off.
@@ -536,6 +622,7 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                          window=new_window, last=new_last,
                          last_ctx=new_last_ctx, last_u=new_last_u,
                          last_msk=new_last_msk,
+                         last_yd=new_last_yd, last_yt=new_last_yt,
                          n_committed=state["n_committed"] + out_len,
                          hist=hist, hist_n=hist_n,
                          step_idx=state["step_idx"] + 1)
@@ -558,7 +645,8 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                 return jnp.where(m, old, new)
 
             for k in ("window", "last", "last_ctx", "last_u", "last_msk",
-                      "n_committed", "hist", "hist_n"):
+                      "last_yd", "last_yt", "n_committed", "hist",
+                      "hist_n"):
                 new_state[k] = keep0(new_state[k], state[k])
             for cn in ("t_cache", "d_cache"):
                 cache_new = dict(new_state[cn])
@@ -570,7 +658,7 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         return new_state, StepOutput(
             out_tokens=out, out_len=out_len, n_accepted=n_acc,
             from_draft=from_draft, u=u, ctx_hashes=all_hashes,
-            masked=all_seen)
+            masked=all_seen, y_draft=y_d, y_target=y_t)
 
     return step
 
@@ -684,6 +772,13 @@ class GenerationResult:
     n_steps: int
     state: Optional[Dict[str, Any]] = None   # final engine state (resume)
     eos: Optional[np.ndarray] = None         # (B,) bool — stopped on EOS
+    y_draft: Optional[np.ndarray] = None     # (B, N, stat_dim) served
+    #                                          detection stats under zeta^D
+    y_target: Optional[np.ndarray] = None    # (B, N, stat_dim), zeta^T
+    stat_scheme: Optional[str] = None        # decoder name the stats were
+    #                                          recorded under (safety tag)
+    stat_key: Optional[bytes] = None         # fingerprint of the PRF key
+    #                                          the stats were recorded under
 
 
 def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
@@ -735,8 +830,9 @@ def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                 [outp.u, jnp.zeros((B, 1), jnp.float32)], axis=1)
 
             def commit(buf, vals, fill):
+                v = (valid[..., None] if vals.ndim == 3 else valid)
                 return buf.at[rows, pos].set(
-                    jnp.where(valid, vals, fill).astype(buf.dtype))
+                    jnp.where(v, vals, fill).astype(buf.dtype))
 
             lens = c["lens"] + valid.sum(axis=1).astype(jnp.int32)
             eos_hit = c["eos"] | is_eos.any(axis=1)
@@ -749,6 +845,8 @@ def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                 us=commit(c["us"], o_u, 0.0),
                 chs=commit(c["chs"], outp.ctx_hashes, 0),
                 msk=commit(c["msk"], outp.masked, False),
+                yd=commit(c["yd"], outp.y_draft, 0.0),
+                yt=commit(c["yt"], outp.y_target, 0.0),
                 lens=lens,
                 eos=eos_hit,
                 done=c["done"] | eos_hit | (lens >= n_tokens),
@@ -830,6 +928,7 @@ def init_gen_carry(state: Dict[str, Any], n_vec: np.ndarray, cap: int,
     receives clipped writes.  A slot whose target is already met by the
     pending token — or whose pending token *is* EOS — starts done."""
     B = state["last"].shape[0]
+    S = state["last_yd"].shape[-1]
     eos = jnp.int32(-1 if eos_id is None else eos_id)
     eos0 = state["last"] == eos
     return {
@@ -842,6 +941,10 @@ def init_gen_carry(state: Dict[str, Any], n_vec: np.ndarray, cap: int,
         "chs": jnp.zeros((B, cap + 1), jnp.uint32)
                   .at[:, 0].set(state["last_ctx"]),
         "msk": jnp.zeros((B, cap + 1), bool).at[:, 0].set(state["last_msk"]),
+        "yd": jnp.zeros((B, cap + 1, S), jnp.float32)
+                 .at[:, 0].set(state["last_yd"]),
+        "yt": jnp.zeros((B, cap + 1, S), jnp.float32)
+                 .at[:, 0].set(state["last_yt"]),
         "lens": jnp.ones((B,), jnp.int32),
         "eos": eos0,
         "done": eos0 | (jnp.asarray(n_vec) <= 1),
@@ -876,8 +979,8 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     Pass a prebuilt ``state`` to reuse an existing prefill, or the
     ``.state`` of a previous GenerationResult to continue a generation —
     chained calls are bit-identical to one long call (slot-0 metadata comes
-    from the state's ``last_ctx``/``last_u``/``last_msk``, never from the
-    prompt tail).
+    from the state's ``last_ctx``/``last_u``/``last_msk``/``last_yd``/
+    ``last_yt``, never from the prompt tail).
 
     Pass ``mesh`` to run the loop sharded: engine state and output buffers
     batch-shard over the dp axes, params shard by the production rules
@@ -942,7 +1045,10 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         ctx_hashes=np.asarray(carry["chs"])[:, :cap],
         masked=np.asarray(carry["msk"])[:, :cap],
         aatps=float(aatps), tokens_per_step=float(tps), n_steps=n_steps,
-        state=carry["state"], eos=np.asarray(carry["eos"]))
+        state=carry["state"], eos=np.asarray(carry["eos"]),
+        y_draft=np.asarray(carry["yd"])[:, :cap],
+        y_target=np.asarray(carry["yt"])[:, :cap],
+        stat_scheme=make_decoder(scfg).name, stat_key=key_fingerprint(key))
 
 
 def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,

@@ -102,6 +102,11 @@ class RequestResult:
     alive_steps: int          # engine steps this request was live for
     n_accepted: int           # accepted draft tokens over those steps
     n_emitted: int            # emitted tokens over those steps
+    y_draft: Optional[np.ndarray] = None    # (n, stat_dim) served zeta^D
+    #                                         detection statistics
+    y_target: Optional[np.ndarray] = None   # (n, stat_dim), zeta^T
+    stat_scheme: Optional[str] = None       # decoder the stats belong to
+    stat_key: Optional[bytes] = None        # PRF-key fingerprint
 
     @property
     def aatps(self) -> float:
@@ -114,13 +119,16 @@ class RequestResult:
     def as_generation_result(self) -> E.GenerationResult:
         """A batch-1 ``GenerationResult`` view, so the detection pipeline
         (``pipeline.records_from_generation``) consumes scheduler output
-        unchanged."""
+        unchanged — including the served detection-stat buffers."""
         return E.GenerationResult(
             tokens=self.tokens[None], lengths=np.array([self.length]),
             from_draft=self.src[None], u=self.u[None],
             ctx_hashes=self.ctx_hashes[None], masked=self.masked[None],
             aatps=self.aatps, tokens_per_step=self.tokens_per_step,
-            n_steps=self.alive_steps, eos=np.array([self.eos]))
+            n_steps=self.alive_steps, eos=np.array([self.eos]),
+            y_draft=None if self.y_draft is None else self.y_draft[None],
+            y_target=None if self.y_target is None else self.y_target[None],
+            stat_scheme=self.stat_scheme, stat_key=self.stat_key)
 
 
 @dataclasses.dataclass
@@ -197,6 +205,7 @@ class Scheduler:
             raise ValueError(f"sync_every must be >= 1, got {sync_every}")
         self.tcfg, self.dcfg, self.scfg = tcfg, dcfg, scfg
         self.B, self.key = batch, key
+        self._stat_scheme = E.make_decoder(scfg).name
         self.max_tokens = max_tokens
         self.max_prompt_len = max_prompt_len
         self.eos_id = eos_id
@@ -291,7 +300,9 @@ class Scheduler:
         eos0 = sub["last"][0] == self._eos
 
         def row0(buf, v0):
-            row = jnp.zeros((buf.shape[1],), buf.dtype)
+            # v0 is the slot-0 value: a scalar, or a (stat_dim,) vector
+            # for the widened detection-stat buffers
+            row = jnp.zeros(buf.shape[1:], buf.dtype)
             return buf.at[b].set(row.at[0].set(v0.astype(buf.dtype)))
 
         zero = jnp.zeros((), jnp.int32)
@@ -302,6 +313,8 @@ class Scheduler:
             us=row0(carry["us"], sub["last_u"][0]),
             chs=row0(carry["chs"], sub["last_ctx"][0]),
             msk=row0(carry["msk"], sub["last_msk"][0]),
+            yd=row0(carry["yd"], sub["last_yd"][0]),
+            yt=row0(carry["yt"], sub["last_yt"][0]),
             lens=carry["lens"].at[b].set(1),
             eos=carry["eos"].at[b].set(eos0),
             done=carry["done"].at[b].set(eos0 | (n_tok_b <= 1)),
@@ -367,7 +380,9 @@ class Scheduler:
                 "fd": self.carry["fd"][b, :n],
                 "us": self.carry["us"][b, :n],
                 "chs": self.carry["chs"][b, :n],
-                "msk": self.carry["msk"][b, :n]})
+                "msk": self.carry["msk"][b, :n],
+                "yd": self.carry["yd"][b, :n],
+                "yt": self.carry["yt"][b, :n]})
             req = slot.request
             res = RequestResult(
                 uid=req.uid, tokens=np.asarray(row["toks"]),
@@ -377,7 +392,11 @@ class Scheduler:
                 eos=bool(flags["eos"][b]),
                 alive_steps=int(flags["alive_steps"][b]),
                 n_accepted=int(flags["acc_total"][b]),
-                n_emitted=int(flags["total"][b]))
+                n_emitted=int(flags["total"][b]),
+                y_draft=np.asarray(row["yd"]),
+                y_target=np.asarray(row["yt"]),
+                stat_scheme=self._stat_scheme,
+                stat_key=E.key_fingerprint(self.key))
             self._acc += res.n_accepted
             self._emitted += res.n_emitted
             self._alive += res.alive_steps

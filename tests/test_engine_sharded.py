@@ -1,8 +1,9 @@
 """Multi-device parity suite: ``generate`` sharded over the production
 sharding rules must be *bit-identical* to the single-device path — tokens,
-acceptance coins, context hashes, provenance flags and masked flags — on a
-forced 8-device CPU mesh, across watermarks (gumbel / none), fused tail
-on/off, and a recurrent (RWKV) draft config.
+acceptance coins, context hashes, provenance flags, masked flags and the
+served detection-stat buffers — on a forced 8-device CPU mesh, across
+watermarks (gumbel / synthid tournament / none), fused tail on/off, and a
+recurrent (RWKV) draft config.
 
 Each test spawns a subprocess because ``--xla_force_host_platform_device_
 count`` must be set before jax first initializes; the rest of the suite
@@ -15,7 +16,7 @@ import sys
 
 import pytest
 
-_CORE_CASES = ["gumbel-fused-auto", "none-standard"]
+_CORE_CASES = ["gumbel-fused-auto", "none-standard", "synthid-fused-auto"]
 _VARIANT_CASES = ["gumbel-fused-off", "gumbel-recurrent-draft"]
 
 
@@ -36,7 +37,8 @@ def _run_cases(cases):
 
 
 def test_sharded_generate_parity_core():
-    """gumbel (fused tail via shard_map) + plain spec sampling."""
+    """gumbel + synthid (fused race/tournament tails via shard_map) and
+    plain spec sampling."""
     _run_cases(_CORE_CASES)
 
 
@@ -81,6 +83,8 @@ def _main(cases):
         if case == "none-standard":
             return dense, dp, E.SpecConfig(K=3, watermark="none",
                                            accept="standard")
+        if case == "synthid-fused-auto":
+            return dense, dp, E.SpecConfig(K=3, watermark="synthid", m=8)
         if case == "gumbel-recurrent-draft":
             rcfg = get_smoke_config("rwkv6-3b", n_layers=1, vocab=V,
                                     d_model=32, n_heads=2, head_dim=16)
@@ -95,7 +99,7 @@ def _main(cases):
         r1 = E.generate(tp, dpar, tcfg, dcfg, scfg, prompts, n_tokens=10,
                         key=KEY, mesh=mesh)
         for f in ("tokens", "u", "ctx_hashes", "from_draft", "masked",
-                  "lengths"):
+                  "lengths", "y_draft", "y_target"):
             a, b = getattr(r0, f), getattr(r1, f)
             assert np.array_equal(a, b), (case, f, a, b)
         assert r0.aatps == r1.aatps and r0.n_steps == r1.n_steps, case

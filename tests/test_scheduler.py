@@ -57,7 +57,8 @@ def _random_schedule(seed, n_requests, *, lo=4, hi=13, plen_lo=4,
 
 
 def _assert_request_matches_solo(r, solo, ctx=""):
-    """Bit-equality of every per-request field against the solo run."""
+    """Bit-equality of every per-request field against the solo run —
+    including the served (stat_dim-wide) detection-stat buffers."""
     ns = int(solo.lengths[0])
     assert r.length == ns, (ctx, r.uid, r.length, ns)
     for name, a, b in (
@@ -65,7 +66,9 @@ def _assert_request_matches_solo(r, solo, ctx=""):
             ("src", r.src, solo.from_draft[0]),
             ("u", r.u, solo.u[0]),
             ("ctx_hashes", r.ctx_hashes, solo.ctx_hashes[0]),
-            ("masked", r.masked, solo.masked[0])):
+            ("masked", r.masked, solo.masked[0]),
+            ("y_draft", r.y_draft, solo.y_draft[0]),
+            ("y_target", r.y_target, solo.y_target[0])):
         np.testing.assert_array_equal(a, b[:ns],
                                       err_msg=f"{ctx} req {r.uid} {name}")
 
@@ -75,13 +78,14 @@ def test_slot_isolation_random_schedule(pair, key, wm, n_req):
     """The acceptance invariant, single-device: a random admission/
     termination schedule (mixed prompt lengths and targets over B=2 slots)
     yields per-request streams and detection records bit-equal to solo
-    generate() runs — on the fused (gumbel) and jnp tournament (synthid)
-    verification tails."""
+    generate() runs — both schemes now on their fused verification tails
+    (the Gumbel race and the in-kernel synthid tournament)."""
     import jax.numpy as jnp
     from repro.core.detection import pipeline
     from repro.serve import engine as E
     tcfg, dcfg, tp, dp = pair
     scfg = E.SpecConfig(K=3, watermark=wm)
+    assert E.use_fused(scfg)    # synthid no longer drops to the jnp tail
     reqs = _random_schedule(7, n_req)
     results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
                                key=key, sync_every=2)
@@ -102,22 +106,24 @@ def test_slot_isolation_random_schedule(pair, key, wm, n_req):
                 err_msg=f"req {r.uid} record.{f}")
 
 
+@pytest.mark.parametrize("wm", ["gumbel", "synthid"])
 @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
 @settings(max_examples=3, deadline=None)
 @given(seed=st.integers(0, 2**16),
        targets=st.lists(st.sampled_from([3, 5, 8]), min_size=3,
                         max_size=5))
-def test_slot_isolation_property(seed, targets):
+def test_slot_isolation_property(wm, seed, targets):
     """Hypothesis: for arbitrary admission/termination schedules, every
-    request's stream is a bit-exact prefix of its solo run.  Prompt length
-    is fixed and targets come from a small set so traces are shared across
-    examples."""
+    request's stream is a bit-exact prefix of its solo run — on the fused
+    Gumbel race and the fused synthid tournament tails alike.  Prompt
+    length is fixed and targets come from a small set so traces are
+    shared across examples."""
     import jax
     import jax.numpy as jnp
     from repro.serve import engine as E
     tcfg, dcfg, tp, dp = _make_pair()
     key = jax.random.key(1234)
-    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    scfg = E.SpecConfig(K=2, watermark=wm, m=8)
     rng = np.random.default_rng(seed)
     reqs = [(rng.integers(1, V, size=6).astype(np.int32), n)
             for n in targets]
@@ -126,26 +132,28 @@ def test_slot_isolation_property(seed, targets):
     for r, (prompt, n) in zip(results, reqs):
         solo = E.generate(tp, dp, tcfg, dcfg, scfg,
                           jnp.asarray(prompt)[None], n_tokens=n, key=key)
-        _assert_request_matches_solo(r, solo, ctx=f"seed={seed}")
+        _assert_request_matches_solo(r, solo, ctx=f"wm={wm} seed={seed}")
 
 
 def test_slot_isolation_sharded():
     """The acceptance invariant on the PR 2 mesh path: the same schedule
     served with ``mesh=`` on a forced multi-device CPU mesh is bit-equal
     to solo single-device runs (subprocess: XLA_FLAGS must precede jax
-    init)."""
+    init) — for the fused Gumbel race and fused synthid tournament."""
     here = os.path.dirname(os.path.abspath(__file__))
     env = dict(os.environ)
     env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
                         + " --xla_force_host_platform_device_count=8")
     env["PYTHONPATH"] = (os.path.join(here, "..", "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
-    out = subprocess.run([sys.executable, os.path.abspath(__file__)],
+    out = subprocess.run([sys.executable, os.path.abspath(__file__),
+                          "gumbel", "synthid"],
                          env=env, capture_output=True, text=True,
-                         timeout=1200)
+                         timeout=1800)
     assert out.returncode == 0, f"\n--- stdout ---\n{out.stdout}" \
                                 f"\n--- stderr ---\n{out.stderr}"
-    assert "SCHEDULER SHARDED PARITY OK" in out.stdout, out.stdout
+    for wm in ("gumbel", "synthid"):
+        assert f"SCHEDULER SHARDED PARITY OK {wm}" in out.stdout, out.stdout
 
 
 def test_per_slot_targets_no_overgeneration(pair, key):
@@ -276,18 +284,20 @@ def test_scheduler_lifecycle_and_validation(pair, key):
 
 
 @pytest.mark.slow
-def test_scheduler_stress_fairness_and_drain(pair, key):
+@pytest.mark.parametrize("wm,n_req", [("gumbel", 200), ("synthid", 100)])
+def test_scheduler_stress_fairness_and_drain(pair, key, wm, n_req):
     """Hundreds of queued requests with random lengths over B=4 slots: no
     deadlock, full drain, FIFO admission, and every request completes
-    within one speculative step of its target (nightly CI)."""
+    within one speculative step of its target (nightly CI) — the synthid
+    variant is the nightly serving stress of the fused tournament tail."""
     from repro.serve import engine as E
     from repro.serve import scheduler as S
     tcfg, dcfg, tp, dp = pair
-    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+    assert E.use_fused(scfg)
     sched = S.Scheduler(tp, dp, tcfg, dcfg, scfg, batch=4, key=key,
                         max_tokens=8, max_prompt_len=6, sync_every=4)
     rng = np.random.default_rng(42)
-    n_req = 200
     targets = {}
     for _ in range(n_req):
         uid = sched.submit(rng.integers(1, V, size=5).astype(np.int32),
@@ -309,7 +319,7 @@ def test_scheduler_stress_fairness_and_drain(pair, key):
 # ---------------------------------------------------------------------------
 
 
-def _main():
+def _main(wms):
     import jax
     import jax.numpy as jnp
     from repro.launch.mesh import make_host_mesh
@@ -319,18 +329,22 @@ def _main():
     mesh = make_host_mesh(data=4, model=1)
     tcfg, dcfg, tp, dp = _make_pair()
     key = jax.random.key(1234)
-    scfg = E.SpecConfig(K=3, watermark="gumbel")
-    reqs = _random_schedule(11, 6, lo=4, hi=10, plen_lo=6, plen_hi=7)
-    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=4,
-                               key=key, sync_every=2, mesh=mesh,
-                               shard_params=False)
-    assert len(results) == len(reqs)
-    for r, (prompt, n) in zip(results, reqs):
-        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
-                          jnp.asarray(prompt)[None], n_tokens=n, key=key)
-        _assert_request_matches_solo(r, solo, ctx="sharded")
-    print("SCHEDULER SHARDED PARITY OK")
+    for wm in wms:
+        scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+        n_req = 6 if wm == "gumbel" else 4
+        reqs = _random_schedule(11, n_req, lo=4, hi=10, plen_lo=6,
+                                plen_hi=7)
+        results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=4,
+                                   key=key, sync_every=2, mesh=mesh,
+                                   shard_params=False)
+        assert len(results) == len(reqs)
+        for r, (prompt, n) in zip(results, reqs):
+            solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                              jnp.asarray(prompt)[None], n_tokens=n,
+                              key=key)
+            _assert_request_matches_solo(r, solo, ctx=f"sharded {wm}")
+        print(f"SCHEDULER SHARDED PARITY OK {wm}")
 
 
 if __name__ == "__main__":
-    _main()
+    _main(sys.argv[1:] or ["gumbel"])

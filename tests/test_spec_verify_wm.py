@@ -1,5 +1,6 @@
 """Fused watermarked verification tail: Pallas kernel vs jnp mirror
-(bit-exact), and the fused engine path vs the jnp engine tail
+(bit-exact) for both tail kinds — the Gumbel race and the SynthID
+m-round tournament — and the fused engine path vs the jnp engine tail
 (token-identical for the same PRF key)."""
 import dataclasses
 
@@ -8,13 +9,16 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.core.watermark.base import FusedTail
 from repro.kernels import ops, ref
 
 KEY = jax.random.key(1234)
 
 
-def _inputs(B, K, V, seed=0, seen_frac=0.3):
-    ks = jax.random.split(jax.random.key(seed), 7)
+def _inputs(B, K, V, seed=0, seen_frac=0.3, draws=False):
+    ks = jax.random.split(jax.random.key(seed), 8)
     p = jax.nn.softmax(jax.random.normal(ks[0], (B, K + 1, V)))
     q = jax.nn.softmax(jax.random.normal(ks[1], (B, K, V)))
     toks = jax.random.randint(ks[2], (B, K), 0, V)
@@ -22,7 +26,10 @@ def _inputs(B, K, V, seed=0, seen_frac=0.3):
     wms = jax.random.bits(ks[4], (B, K + 1), dtype=jnp.uint32)
     pls = jax.random.bits(ks[5], (B, K + 1), dtype=jnp.uint32)
     seen = (jax.random.uniform(ks[6], (B, K + 1)) < seen_frac)
-    return p, q, toks, u, wms, pls, seen
+    if not draws:
+        return p, q, toks, u, wms, pls, seen
+    dws = jax.random.bits(ks[7], (B, K + 1), dtype=jnp.uint32)
+    return p, q, toks, u, wms, pls, seen, dws
 
 
 def _assert_match(outs_k, outs_r, msg=""):
@@ -132,6 +139,130 @@ def test_live_mask_skips_drained_rows():
 
 
 # ---------------------------------------------------------------------------
+# Tournament (SynthID) tail: kernel vs mirror vs host decoder, bit-exact.
+# ---------------------------------------------------------------------------
+
+
+def _tournament_outs(args, tail, interpret):
+    p, q, toks, u, wms, pls, seen, dws = args
+    return ops.spec_verify_wm(p, q, toks, u, wms, pls, seen, None, dws,
+                              tail=tail, interpret=interpret)
+
+
+# vocabs off the 128-lane grid (V=1000 pads to 1024, where XLA reduction
+# extents provably change float sums) exercise the padded-extent canon
+@pytest.mark.parametrize("B,K,V,m,degen", [
+    (2, 1, 64, 4, False), (3, 4, 257, 8, False), (2, 3, 1000, 30, False),
+    (3, 4, 257, 8, True), (2, 8, 1000, 30, True)])
+def test_tournament_kernel_matches_ref_sweep(B, K, V, m, degen):
+    tail = FusedTail(kind="tournament", m=m, stat_dim=m, degenerate=degen)
+    args = _inputs(B, K, V, seed=B * K + V + m, draws=True)
+    outs_k = _tournament_outs(args, tail, True)     # staged Pallas program
+    outs_r = _tournament_outs(args, tail, None)     # CPU jnp mirror
+    for a, b, nm in zip(outs_k, outs_r, ["n_acc", "acc", "etok", "estat"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{(B, K, V, m, degen)}:{nm}")
+    # the emitted g-bit stats really are bits, m wide
+    assert np.asarray(outs_k[3]).shape == (B, m)
+    assert set(np.unique(np.asarray(outs_k[3]))) <= {0.0, 1.0}
+
+
+def test_tournament_tail_matches_host_decoder_sample():
+    """All-reject coins pin the emitted slot to 0: the kernel's tournament
+    resample of the (p_0 − q_0)_+ row must equal ``Decoder.sample`` on the
+    same raw row (the host reference the engine's jnp tail uses); all-
+    accept coins pin the bonus slot K likewise."""
+    from repro.core import prf
+    from repro.core.watermark.base import get_decoder
+    B, K, V, m = 3, 3, 257, 8
+    dec = get_decoder("synthid", m=m)
+    p, q, toks, _, _, _, _ = _inputs(B, K, V, seed=11, seen_frac=0.0)
+    ctx = jax.random.bits(jax.random.key(5), (B, K + 1), dtype=jnp.uint32)
+    wms = jax.vmap(jax.vmap(
+        lambda ch: prf.wm_seed(KEY, ch, prf.STREAM_TARGET)))(ctx)
+    dws = jax.vmap(jax.vmap(lambda ch: prf.wm_seed(
+        KEY, ch, prf.STREAM_PLAIN + prf.STREAM_TARGET)))(ctx)
+    pls = jnp.zeros((B, K + 1), jnp.uint32)
+    seen = jnp.zeros((B, K + 1), bool)
+    tail = FusedTail(kind="tournament", m=m, stat_dim=m, degenerate=False)
+    for u, slot in [(jnp.ones((B, K)), 0), (jnp.zeros((B, K)), K)]:
+        n_acc, _, etok, estat = ops.spec_verify_wm(
+            p, q, toks, u, wms, pls, seen, None, dws, tail=tail,
+            interpret=True)
+        assert np.all(np.asarray(n_acc) == slot)
+        row = (p[:, slot] - q[:, slot] if slot < K else p[:, K])
+        row = jnp.maximum(row, 0.0)
+        want_tok, want_y = jax.vmap(
+            lambda r, ch: dec.sample(r, KEY, ch, prf.STREAM_TARGET))(
+            row, ctx[:, slot])
+        np.testing.assert_array_equal(np.asarray(etok),
+                                      np.asarray(want_tok), err_msg=f"{slot}")
+        np.testing.assert_array_equal(np.asarray(estat),
+                                      np.asarray(want_y), err_msg=f"{slot}")
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 5), st.integers(2, 300),
+       st.integers(1, 12), st.booleans(), st.integers(0, 2**31 - 1))
+def test_tournament_tail_property(b, k, v, m, degen, seed):
+    """Property: kernel == mirror bit-exactly for arbitrary shapes, round
+    counts and degenerate/finite draws."""
+    tail = FusedTail(kind="tournament", m=m, stat_dim=m, degenerate=degen)
+    args = _inputs(b, k, v, seed=seed % 9973, draws=True)
+    outs_k = _tournament_outs(args, tail, True)
+    outs_r = _tournament_outs(args, tail, None)
+    for a, b_, nm in zip(outs_k, outs_r, ["n_acc", "acc", "etok", "estat"]):
+        assert np.array_equal(np.asarray(a), np.asarray(b_)), nm
+
+
+def test_tournament_live_mask_skips_drained_rows():
+    tail = FusedTail(kind="tournament", m=6, stat_dim=6, degenerate=False)
+    args = _inputs(4, 3, 257, seed=5, draws=True)
+    live = jnp.array([1, 0, 1, 0], jnp.int32)
+    lv = np.asarray(live, bool)
+    base = _tournament_outs(args, tail, None)
+    p, q, toks, u, wms, pls, seen, dws = args
+    for interp in (None, True):
+        outs = ops.spec_verify_wm(p, q, toks, u, wms, pls, seen, live, dws,
+                                  tail=tail, interpret=interp)
+        for a, m_, nm in zip(base, outs, ["n_acc", "acc", "etok", "estat"]):
+            a, m_ = np.asarray(a), np.asarray(m_)
+            np.testing.assert_array_equal(m_[lv], a[lv],
+                                          err_msg=f"live rows {nm}")
+            assert np.all(m_[~lv] == 0), (interp, nm)
+
+
+def test_use_fused_capability_dispatch():
+    """Regression (both directions): fused='on' is now honored for synthid
+    (the tournament tail is registered), and raises only for schemes that
+    declare no fused tail."""
+    from repro.core.watermark.base import Decoder, register, _REGISTRY
+    from repro.serve import engine as E
+    for wm in ("gumbel", "synthid", "synthid-inf", "none"):
+        acc = "standard" if wm == "none" else "pseudorandom"
+        assert E.use_fused(E.SpecConfig(watermark=wm, fused="on",
+                                        accept=acc))
+        assert E.use_fused(E.SpecConfig(watermark=wm, fused="auto",
+                                        accept=acc))
+        assert not E.use_fused(E.SpecConfig(watermark=wm, fused="off",
+                                            accept=acc))
+
+    @register("_nofuse_test")
+    def _make_nofuse(**kw):
+        dec = E.make_decoder(E.SpecConfig(watermark="gumbel"))
+        return dataclasses.replace(dec, name="nofuse", fused_tail=None,
+                                   draft_sampler=None)
+
+    try:
+        assert not E.use_fused(E.SpecConfig(watermark="_nofuse_test"))
+        with pytest.raises(ValueError, match="no fused verification tail"):
+            E.use_fused(E.SpecConfig(watermark="_nofuse_test", fused="on"))
+    finally:
+        _REGISTRY.pop("_nofuse_test", None)
+
+
+# ---------------------------------------------------------------------------
 # Engine-level parity: fused tail vs jnp tail, same PRF key -> same tokens.
 # ---------------------------------------------------------------------------
 
@@ -151,13 +282,13 @@ def engine_pair():
     return tcfg, dcfg, tp, dp
 
 
-@pytest.mark.parametrize("wm", ["gumbel", "none"])
+@pytest.mark.parametrize("wm", ["gumbel", "none", "synthid", "synthid-inf"])
 @pytest.mark.parametrize("K", [1, 4])
 def test_engine_fused_matches_jnp_tail(engine_pair, wm, K):
     from repro.serve import engine as E
     tcfg, dcfg, tp, dp = engine_pair
     prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V_ENG)
-    sc_f = E.SpecConfig(K=K, watermark=wm, fused="on",
+    sc_f = E.SpecConfig(K=K, watermark=wm, m=8, fused="on",
                         accept="pseudorandom" if wm != "none"
                         else "standard")
     sc_j = dataclasses.replace(sc_f, fused="off")
@@ -170,7 +301,7 @@ def test_engine_fused_matches_jnp_tail(engine_pair, wm, K):
         st_f, o_f = step_f(tp, dp, st_f, KEY)
         st_j, o_j = step_j(tp, dp, st_j, KEY)
         for name in ("out_tokens", "out_len", "n_accepted", "from_draft",
-                     "u", "ctx_hashes", "masked"):
+                     "u", "ctx_hashes", "masked", "y_draft", "y_target"):
             a = np.asarray(getattr(o_f, name))
             b = np.asarray(getattr(o_j, name))
             assert np.array_equal(a, b), (wm, K, name)
@@ -180,16 +311,19 @@ def test_engine_fused_matches_jnp_tail(engine_pair, wm, K):
                               np.asarray(st_j["hist_n"]))
 
 
-def test_generate_fused_matches_jnp(engine_pair):
+@pytest.mark.parametrize("wm", ["gumbel", "synthid"])
+def test_generate_fused_matches_jnp(engine_pair, wm):
     from repro.serve import engine as E
     tcfg, dcfg, tp, dp = engine_pair
     prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V_ENG)
-    sc_f = E.SpecConfig(K=3, watermark="gumbel")
+    sc_f = E.SpecConfig(K=3, watermark=wm, m=8)
     sc_j = dataclasses.replace(sc_f, fused="off")
     rf = E.generate(tp, dp, tcfg, dcfg, sc_f, prompts, n_tokens=16, key=KEY)
     rj = E.generate(tp, dp, tcfg, dcfg, sc_j, prompts, n_tokens=16, key=KEY)
     assert np.array_equal(rf.tokens, rj.tokens)
     assert np.array_equal(rf.lengths, rj.lengths)
+    assert np.array_equal(rf.y_draft, rj.y_draft)
+    assert np.array_equal(rf.y_target, rj.y_target)
     assert rf.n_steps == rj.n_steps
     # streaming sync points don't change the result
     rs = E.generate(tp, dp, tcfg, dcfg, sc_f, prompts, n_tokens=16, key=KEY,
@@ -197,15 +331,64 @@ def test_generate_fused_matches_jnp(engine_pair):
     assert np.array_equal(rf.tokens, rs.tokens)
 
 
-def test_masked_repeated_contexts_use_plain_stream(engine_pair):
+@pytest.mark.parametrize("wm", ["gumbel", "synthid"])
+def test_masked_repeated_contexts_use_plain_stream(engine_pair, wm):
     """A degenerate prompt forces repeated contexts; the fused path must
     flag them and still match the jnp tail exactly."""
     from repro.serve import engine as E
     tcfg, dcfg, tp, dp = engine_pair
     prompts = jnp.ones((2, 8), jnp.int32) * 5
-    sc_f = E.SpecConfig(K=2, watermark="gumbel", mask_repeated=True)
+    sc_f = E.SpecConfig(K=2, watermark=wm, m=8, mask_repeated=True)
     sc_j = dataclasses.replace(sc_f, fused="off")
     rf = E.generate(tp, dp, tcfg, dcfg, sc_f, prompts, n_tokens=20, key=KEY)
     rj = E.generate(tp, dp, tcfg, dcfg, sc_j, prompts, n_tokens=20, key=KEY)
     assert np.array_equal(rf.tokens, rj.tokens)
     assert np.array_equal(rf.masked, rj.masked)
+    assert np.array_equal(rf.y_draft, rj.y_draft)
+
+
+def test_served_stats_match_recovery(engine_pair):
+    """The engine's served y^D/y^T stat buffers are bit-identical to the
+    detection-time recovery from (key, context, token) — for the m-wide
+    synthid g-bits and the scalar gumbel U alike — so
+    ``records_from_generation`` can consume served records directly."""
+    from repro.core.detection import pipeline
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = engine_pair
+    prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V_ENG)
+    # m=1 synthid keeps its trailing stat axis (flat_stat declaration),
+    # unlike gumbel's genuinely flat scalar statistic
+    for wm, m in (("synthid", 8), ("synthid", 1), ("gumbel", 8)):
+        scfg = E.SpecConfig(K=3, watermark=wm, m=m)
+        dec = E.make_decoder(scfg)
+        res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=12,
+                         key=KEY)
+        assert res.stat_scheme == dec.name
+        served = pipeline.records_from_generation(res, dec, KEY, tcfg.vocab)
+        recovered = pipeline.records_from_generation(res, dec, KEY,
+                                                     tcfg.vocab,
+                                                     use_served=False)
+        for rs, rr in zip(served, recovered):
+            np.testing.assert_array_equal(rs.y_draft, rr.y_draft, err_msg=wm)
+            np.testing.assert_array_equal(rs.y_target, rr.y_target,
+                                          err_msg=wm)
+            assert rs.y_draft.shape == rr.y_draft.shape
+        # a mismatched decoder must NOT consume the served buffers
+        other = E.make_decoder(E.SpecConfig(watermark="gumbel" if
+                                            wm != "gumbel" else "synthid"))
+        alt = pipeline.records_from_generation(res, other, KEY, tcfg.vocab)
+        ref_alt = pipeline.records_from_generation(res, other, KEY,
+                                                   tcfg.vocab,
+                                                   use_served=False)
+        np.testing.assert_array_equal(alt[0].y_draft, ref_alt[0].y_draft)
+        # ...nor may a DIFFERENT detection key (wrong-key false-positive
+        # calibration): the served key-A stats must be re-recovered under
+        # key B, not echoed back
+        key_b = jax.random.key(999)
+        wk = pipeline.records_from_generation(res, dec, key_b, tcfg.vocab)
+        wk_ref = pipeline.records_from_generation(res, dec, key_b,
+                                                  tcfg.vocab,
+                                                  use_served=False)
+        np.testing.assert_array_equal(wk[0].y_draft, wk_ref[0].y_draft,
+                                      err_msg=f"{wm} wrong-key")
+        assert not np.array_equal(wk[0].y_draft, served[0].y_draft)
