@@ -87,6 +87,64 @@ def _refresh_from_hlo(rec: dict, dry_dir: str) -> dict:
     return rec
 
 
+def paged_decode_projection(arch: str = "yi-6b", *, batch: int = 256,
+                            page_size: int = 64, max_seq: int = 32768,
+                            verbose: bool = True):
+    """Analytic HBM-bytes projection for the paged-decode attention kernel
+    (kernels/paged_attention.py) vs the dense cache row scan, per spec
+    step.
+
+    The dense decode kernel streams every slot's full ``max_seq`` KV rows
+    regardless of how many tokens the slot has actually committed; the
+    paged kernel's grid only visits pages its table maps, so it reads
+    ``ceil(pos / page_size)`` pages per slot plus the (tiny) page-table
+    gather that scalar-prefetch stages.  At mean fill fraction ``f`` the
+    paged scan therefore moves ~``f``x the dense bytes (rounded up to page
+    granularity) — the indirection overhead is the table itself, ~1e-4 of
+    a page.  Rows land in artifacts/roofline_paged.json."""
+    cfg = get_config(arch)
+    hd = cfg.head_dim
+    hkv = getattr(cfg, "n_kv_heads", None) or cfg.n_heads
+    dtype_bytes = 2                       # bf16 pool
+    n_pages_max = -(-max_seq // page_size)
+    # per spec step both models scan their caches once; the draft cache is
+    # a small constant factor, so project the target only (2 pools: K + V)
+    dense_bytes = 2 * cfg.n_layers * batch * max_seq * hkv * hd * dtype_bytes
+    table_bytes = cfg.n_layers * batch * n_pages_max * 4   # int32 tables
+    rows = []
+    for fill in (0.125, 0.25, 0.5, 1.0):
+        pos = int(fill * max_seq)
+        pages = -(-pos // page_size) if pos else 0
+        paged_bytes = (2 * cfg.n_layers * batch * pages * page_size
+                       * hkv * hd * dtype_bytes) + table_bytes
+        rows.append({
+            "arch": arch, "batch": batch, "page_size": page_size,
+            "max_seq": max_seq, "fill": fill, "pages_per_slot": pages,
+            "dense_bytes_per_step": float(f"{dense_bytes:.6g}"),
+            "paged_bytes_per_step": float(f"{paged_bytes:.6g}"),
+            "table_bytes_per_step": float(f"{table_bytes:.6g}"),
+            "bytes_ratio": round(paged_bytes / dense_bytes, 4),
+            "dense_memory_s": float(f"{dense_bytes / HBM_BW:.6g}"),
+            "paged_memory_s": float(f"{paged_bytes / HBM_BW:.6g}"),
+        })
+    with open(os.path.join(ART, "roofline_paged.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    if verbose:
+        print(f"\npaged-decode projection ({arch}, B={batch}, "
+              f"page_size={page_size}, max_seq={max_seq}):")
+        print(f"{'fill':>6s} {'pages/slot':>10s} {'dense GB':>9s} "
+              f"{'paged GB':>9s} {'ratio':>6s} {'dense ms':>9s} "
+              f"{'paged ms':>9s}")
+        for r in rows:
+            print(f"{r['fill']:6.3f} {r['pages_per_slot']:10d} "
+                  f"{r['dense_bytes_per_step'] / 1e9:9.2f} "
+                  f"{r['paged_bytes_per_step'] / 1e9:9.2f} "
+                  f"{r['bytes_ratio']:6.3f} "
+                  f"{r['dense_memory_s'] * 1e3:9.3f} "
+                  f"{r['paged_memory_s'] * 1e3:9.3f}")
+    return rows
+
+
 def run(verbose: bool = True, mesh_filter: str = "16x16",
         variant: str = "baseline", refresh: bool = True):
     dry = DRY + ("_opt" if variant == "opt" else "")
@@ -124,3 +182,4 @@ def run(verbose: bool = True, mesh_filter: str = "16x16",
 
 if __name__ == "__main__":
     run(mesh_filter="")
+    paged_decode_projection()

@@ -1,0 +1,143 @@
+"""Pallas paged-decode attention: GQA decode against a block-paged KV pool.
+
+The serving KV cache is a fixed pool of ``num_pages`` pages of
+``page_size`` token slots each — ``(num_pages, page_size, Hkv, hd)`` per
+layer — plus a per-slot **page table** ``(B, max_pages)`` of physical page
+ids mapping a slot's logical positions ``[p*page_size, (p+1)*page_size)``
+to pool rows.  Page 0 is the reserved *null* page: table tails point at it,
+and writes routed there (freed slots, clamped overflow) land in garbage
+that the position gate below never attends.
+
+The kernel runs a ``(B, Hkv, n_pages)`` grid, pages innermost.  The page
+table and per-slot positions are **scalar-prefetched**
+(``pltpu.PrefetchScalarGridSpec``) so each k/v page block is DMA'd straight
+from its table-selected pool row into VMEM — the gather is the block
+index_map, no dense (B, S, Hkv, hd) cache is ever materialized.  Per
+(batch, kv-head) the per-page score tiles and value pages accumulate in
+VMEM scratch that persists across the page steps; the last page step
+applies the position mask, one direct softmax over the full gathered
+extent, and the value contraction.
+
+Bit-exactness contract: the output equals
+``layers.decode_attention(q, pool[table-gather], ...)`` — the jnp mirror
+(``ref.paged_attention_ref``) *is* that gather + dense path, and masked
+scores use the same ``finfo.min`` sentinel, so the masked lanes underflow
+to exact zeros and the softmax is invariant to the gathered extent.  The
+mirror is the CPU serving path; the Pallas program is validated against it
+in interpret mode (``tests/test_paged_attention.py``).
+
+TPU layout note: ``hd`` should be a multiple of 128 (lane dim of the q/k/v
+blocks); the scores scratch has the gathered extent ``max_pages *
+page_size`` on its lane dim, so pick ``page_size`` (or the table width)
+such that the product is 128-aligned to avoid Mosaic re-tiling.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _paged_attn_body(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+                     scores_ref, v_scr_ref, *, n_pages: int, page_size: int,
+                     n_rep: int, sq: int):
+    """Grid (B, Hkv, n_pages), pages innermost.  Per page step: one score
+    tile against the table-selected k page + stash of the v page; on the
+    last page: mask, softmax over the full extent, value contraction."""
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+    hd = q_ref.shape[-1]
+
+    q = q_ref[0].reshape(sq * n_rep, hd).astype(jnp.float32)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)              # (page_size, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+    scores_ref[:, pl.ds(p * page_size, page_size)] = s
+    v_scr_ref[pl.ds(p * page_size, page_size), :] = \
+        v_ref[0, :, 0, :].astype(jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        ext = n_pages * page_size
+        scale = 1.0 / math.sqrt(hd)
+        # logical kv position of lane j is j (the table maps logical page
+        # p -> physical pool row, so the gathered extent is logical order);
+        # query row r = qi * n_rep + g attends kv < pos[b] + qi.
+        kv_pos = jax.lax.broadcasted_iota(jnp.int32, (sq * n_rep, ext), 1)
+        q_off = jax.lax.broadcasted_iota(
+            jnp.int32, (sq * n_rep, ext), 0) // n_rep
+        valid = kv_pos < pos_ref[b] + q_off
+        sc = scores_ref[:, :] * scale
+        sc = jnp.where(valid, sc, jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(sc, axis=-1)
+        out = jax.lax.dot_general(probs, v_scr_ref[:, :],
+                                  (((1,), (0,)), ((), ())))
+        o_ref[0] = out.reshape(sq, n_rep, hd).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pool, v_pool, page_table, pos, *,
+                           interpret: bool = False):
+    """q (B,Sq,H,hd); pools (P,page_size,Hkv,hd); page_table (B,max_pages)
+    int32 physical page ids (0 = null); pos () or (B,) — query i attends
+    logical kv positions < pos + i (``decode_attention`` semantics).
+    Returns (B,Sq,H,hd) in the pool dtype."""
+    B, Sq, H, hd = q.shape
+    _, page_size, Hkv, _ = k_pool.shape
+    n_rep = H // Hkv
+    n_pages = page_table.shape[1]
+    ext = n_pages * page_size
+    pos_b = jnp.broadcast_to(jnp.atleast_1d(pos), (B,)).astype(jnp.int32)
+
+    body = partial(_paged_attn_body, n_pages=n_pages, page_size=page_size,
+                   n_rep=n_rep, sq=Sq)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, Sq, n_rep, hd),
+                         lambda b, h, p, tbl, ps: (b, 0, h, 0)),
+            # the page-table gather: block index straight off the
+            # prefetched scalars — logical page p of slot b comes from
+            # pool row tbl[b, p]
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, p, tbl, ps: (tbl[b, p], 0, h, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, p, tbl, ps: (tbl[b, p], 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Sq, n_rep, hd),
+                               lambda b, h, p, tbl, ps: (b, 0, h, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Sq * n_rep, ext), jnp.float32),
+            pltpu.VMEM((ext, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        body, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Sq, H, hd), v_pool.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), pos_b, q, k_pool, v_pool)
+
+
+@partial(jax.jit, static_argnames=("window", "grouped", "interpret"))
+def paged_decode_attention(q, k_pool, v_pool, page_table, pos, *,
+                           window: int = 0, grouped: bool = False,
+                           interpret: bool | None = None):
+    """Public paged-decode attention.  On TPU this stages the Mosaic
+    kernel; on CPU the default is the bit-exact jnp mirror
+    (``ref.paged_attention_ref`` = page-table gather + the dense
+    ``decode_attention`` math — parity enforced by tests), because the
+    Pallas interpreter walks the (B, Hkv, n_pages) grid serially.  Pass
+    ``interpret=True`` to force the interpreter (kernel validation).
+
+    ``window`` (sliding-window attention) and ``grouped`` (the
+    sequence-sharded GQA softmax layout) always take the mirror — the
+    kernel covers the serving decode path (full-extent GQA)."""
+    if window or (interpret is None and jax.default_backend() != "tpu"):
+        from repro.kernels import ref
+        return ref.paged_attention_ref(q, k_pool, v_pool, page_table, pos,
+                                       window=window, grouped=grouped)
+    return paged_attention_kernel(q, k_pool, v_pool, page_table, pos,
+                                  interpret=bool(interpret))

@@ -163,3 +163,34 @@ def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
         estat = jnp.where(lv if estat.ndim == 1 else lv[:, None], estat,
                           0.0)
     return n_acc, prefix, etok, estat
+
+
+# ---------------------------------------------------------------------------
+# Paged-decode attention mirror (kernels/paged_attention.py)
+# ---------------------------------------------------------------------------
+
+
+def paged_gather(pool, page_table):
+    """Materialize a slot-major dense view of a paged KV pool.
+
+    pool (P, page_size, Hkv, hd), page_table (B, max_pages) physical page
+    ids -> (B, max_pages * page_size, Hkv, hd), logical position order.
+    Null-page (id 0) tails gather garbage at logical positions >= the
+    slot's allocation, which the position gate masks before the softmax."""
+    B, n_pages = page_table.shape
+    page_size = pool.shape[1]
+    return pool[page_table].reshape((B, n_pages * page_size) + pool.shape[2:])
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, pos, *, window=0,
+                        grouped=False):
+    """Bit-exact jnp mirror of ``paged_attention_kernel`` — and the CPU
+    serving path: the page-table gather followed by the unchanged dense
+    ``decode_attention`` math.  Masked lanes (including everything a null
+    page gathers) use the same ``finfo.min`` sentinel as the kernel, so
+    the softmax is invariant to the gathered extent and the output is
+    bit-identical to dense caching (the slot-isolation contract)."""
+    from repro.models import layers as L
+    k = paged_gather(k_pool, page_table)
+    v = paged_gather(v_pool, page_table)
+    return L.decode_attention(q, k, v, pos, window=window, grouped=grouped)

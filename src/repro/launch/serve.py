@@ -62,6 +62,16 @@ def main():
     ap.add_argument("--eos-id", type=int, default=-1,
                     help="token id that terminates a slot early "
                          "(-1 = disabled)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="block-paged KV cache: tokens per page (0 = "
+                         "dense caching); requires --num-pages")
+    ap.add_argument("--num-pages", type=int, default=0,
+                    help="block-paged KV cache: physical pages in the "
+                         "shared pool (page 0 is the reserved null page)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="paged admission prefills prompts in chunks of "
+                         "this many tokens (one fixed compile, no decode "
+                         "stall on long prompts)")
     args = ap.parse_args()
 
     if args.devices:
@@ -133,14 +143,21 @@ def main():
                              "n_tokens": int(obj.get("n_tokens",
                                                      args.tokens))})
         eos = None if args.eos_id < 0 else args.eos_id
+        if args.page_size and not args.num_pages:
+            ap.error("--page-size requires --num-pages")
         results = E.serve_requests(
             t_params, d_params, tcfg, dcfg, scfg, reqs, batch=args.batch,
-            key=key, eos_id=eos, sync_every=args.sync_every, mesh=mesh)
+            key=key, eos_id=eos, sync_every=args.sync_every, mesh=mesh,
+            page_size=args.page_size or None,
+            num_pages=args.num_pages or None,
+            prefill_chunk=args.prefill_chunk if args.page_size else None)
         tot = sum(r.length for r in results)
         alive = sum(r.alive_steps for r in results)
         acc = sum(r.n_accepted for r in results)
+        paged = (f" paged(page_size={args.page_size}, "
+                 f"num_pages={args.num_pages})" if args.page_size else "")
         print(f"arch={args.arch} watermark={args.watermark} "
-              f"continuous batching: {len(results)} requests over "
+              f"continuous batching{paged}: {len(results)} requests over "
               f"{args.batch} slots")
         print(f"AATPS={acc / max(alive, 1):.3f} tokens={tot} "
               f"alive-slot-steps={alive}")

@@ -49,6 +49,18 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=jnp.float32):
     return _mod(cfg).init_cache(cfg, batch, max_seq, dtype)
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_pages: int, dtype=jnp.float32):
+    """Block-paged KV cache (attention archs only — recurrent states are
+    O(1) per slot, nothing to page)."""
+    if cfg.arch_type not in _ATTN_FAMS:
+        raise ValueError(
+            f"paged KV caching needs an attention cache; arch_type="
+            f"{cfg.arch_type!r} keeps O(1) recurrent state per slot")
+    return T.init_paged_cache(cfg, batch, num_pages, page_size, max_pages,
+                              dtype)
+
+
 def decode_step(params, cfg: ModelConfig, token, cache):
     return _mod(cfg).decode_step(params, cfg, token, cache)
 

@@ -258,6 +258,32 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     }
 
 
+def init_paged_cache(cfg: ModelConfig, batch: int, num_pages: int,
+                     page_size: int, max_pages: int,
+                     dtype=jnp.float32) -> Dict[str, Any]:
+    """Block-paged KV cache: a fixed pool of ``num_pages`` pages of
+    ``page_size`` token slots per layer, plus a per-slot page table of
+    physical page ids (0 = the reserved null page — allocators must never
+    hand it out; all-zero table rows make a slot write-harmless).  Slots
+    share the pool, so live concurrency is bounded by *tokens in flight*,
+    not ``batch × max_seq`` rectangles.  ``extend_step`` detects the
+    ``page_table`` key and reads/appends through the indirection."""
+    if cfg.arch_type in ("vlm", "audio"):
+        raise ValueError(
+            f"paged KV caching does not support arch_type="
+            f"{cfg.arch_type!r}: the cross-attention memories "
+            "(image/audio frames) are per-request dense blocks, not "
+            "token pages")
+    hd = cfg.resolved_head_dim
+    pool = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, hd)
+    return {
+        "k": jnp.zeros(pool, dtype),
+        "v": jnp.zeros(pool, dtype),
+        "page_table": jnp.zeros((batch, max_pages), jnp.int32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
 # ---------------------------------------------------------------------------
 # Prefill: full-seq forward that also fills the cache.
 # ---------------------------------------------------------------------------
@@ -349,6 +375,24 @@ def _self_attn_step(p, cfg, x, cache_k, cache_v, pos):
     return x + L.out_proj(p["attn"], out), cache_k, cache_v
 
 
+def _self_attn_step_paged(p, cfg, x, pool_k, pool_v, table, pos):
+    """Paged twin of ``_self_attn_step``: x (B,Sq,d); pools (P, page_size,
+    Hkv, hd); table (B, max_pages) physical page ids; pos (B,).  Reads and
+    appends go through the page indirection; the math (RoPE positions,
+    position-gated masked softmax) is identical, so the output is
+    bit-identical to the dense path over the same logical entries."""
+    B, Sq = x.shape[:2]
+    h = L.rms_norm(x, p["ln_attn"], cfg.rms_eps)
+    pos_b = jnp.atleast_1d(pos)
+    positions = pos_b[:, None] + jnp.arange(Sq)[None]        # (B|1, Sq)
+    q, k, v = L.qkv_proj(p["attn"], h, positions, cfg.rope_theta)
+    pool_k = L.paged_cache_write(pool_k, table, k, pos)
+    pool_v = L.paged_cache_write(pool_v, table, v, pos)
+    out = L.paged_decode_attention(q, pool_k, pool_v, table, pos + 1,
+                                   window=cfg.window, grouped=cfg.opt_decode)
+    return x + L.out_proj(p["attn"], out), pool_k, pool_v
+
+
 def _cross_attn_step(p, cfg, x, xk, xv):
     h = L.rms_norm(x, p["ln_cross"], cfg.rms_eps)
     q = jnp.einsum("bsd,dhk->bshk", h, p["cross"]["wq"])
@@ -405,6 +449,19 @@ def extend_step(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
         x, (ck, cv) = lax.scan(
             body, x, (params["blocks"], cache["k"], cache["v"],
                       cache["ck"], cache["cv"]))
+        cache = dict(cache, k=ck, v=cv, pos=pos + Sq)
+    elif "page_table" in cache:
+        table = cache["page_table"]
+
+        def body(h, inner):
+            p, k_l, v_l = inner
+            h, k_l, v_l = _self_attn_step_paged(p, cfg, h, k_l, v_l,
+                                                table, pos)
+            h, _ = _ffn_block(p, cfg, h, dropless=True)
+            return h, (k_l, v_l)
+
+        x, (ck, cv) = lax.scan(body, x,
+                               (params["blocks"], cache["k"], cache["v"]))
         cache = dict(cache, k=ck, v=cv, pos=pos + Sq)
     else:
         def body(h, inner):

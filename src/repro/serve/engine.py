@@ -192,6 +192,48 @@ def _is_recurrent(cfg: ModelConfig) -> bool:
     return cfg.arch_type in ("ssm", "hybrid")
 
 
+def first_token_meta(dec: Decoder, scfg: SpecConfig, key, last_logits,
+                     window, vocab: int) -> Dict[str, Any]:
+    """Sample the first (prefill) token from ``last_logits`` (B, V) under
+    the context ``window`` (B, c) and derive its slot-0 metadata — the
+    shared tail of ``init_state`` and the scheduler's chunked-prefill
+    finalize, so the two admission paths are bit-identical by
+    construction."""
+    ctx0 = prf.context_hash(window)
+    p0 = jax.nn.softmax(
+        last_logits.astype(jnp.float32) / scfg.temperature, -1)
+    first, _ = jax.vmap(
+        lambda pr, ch: dec.sample(pr, key, ch, prf.STREAM_TARGET))(p0, ctx0)
+    first = first.astype(jnp.int32)
+    window = jnp.concatenate([window[:, 1:], first[:, None]], axis=1)
+    yd_seed = jax.vmap(
+        lambda ch: prf.wm_seed(key, ch, prf.STREAM_DRAFT))(ctx0)
+    yt_seed = jax.vmap(
+        lambda ch: prf.wm_seed(key, ch, prf.STREAM_TARGET))(ctx0)
+    return {
+        "window": window,          # (B, c) — ends at the pending last token
+        "last": first,             # (B,) committed but not yet consumed
+        # slot-0 metadata of ``last`` (resume path: never recomputed from
+        # the prompt tail) — the context it was sampled under, its recorded
+        # acceptance coin, its repeated-context flag, and its detection
+        # statistics under the draft/target streams.
+        "last_ctx": ctx0,
+        "last_u": jax.vmap(lambda ch: prf.accept_uniform(key, ch))(ctx0),
+        "last_msk": jnp.zeros(first.shape, bool),
+        "last_yd": _token_stat_batch(dec, yd_seed, first, vocab),
+        "last_yt": _token_stat_batch(dec, yt_seed, first, vocab),
+    }
+
+
+def prompt_window(prompts, c: int):
+    """The context-hash window of a prompt batch (B, S0) — the last ``c``
+    tokens, left-padded with zeros when the prompt is shorter."""
+    window = prompts[:, -c:]
+    if window.shape[1] < c:
+        window = jnp.pad(window, ((0, 0), (c - window.shape[1], 0)))
+    return window
+
+
 def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                scfg: SpecConfig, prompts: jnp.ndarray, max_seq: int, key,
                cache_dtype=None, extras: Optional[Dict[str, Any]] = None
@@ -207,43 +249,57 @@ def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                                   max_seq, cache_dtype=cache_dtype)
     _, d_cache = M.prefill(d_params, dcfg, {"tokens": prompts}, max_seq,
                            cache_dtype=cache_dtype)
-    c = scfg.ctx_window
-    window = prompts[:, -c:]
-    if window.shape[1] < c:
-        window = jnp.pad(window, ((0, 0), (c - window.shape[1], 0)))
-    ctx0 = prf.context_hash(window)
-    p0 = jax.nn.softmax(
-        t_logits[:, -1].astype(jnp.float32) / scfg.temperature, -1)
-    first, _ = jax.vmap(
-        lambda pr, ch: dec.sample(pr, key, ch, prf.STREAM_TARGET))(p0, ctx0)
-    first = first.astype(jnp.int32)
-    window = jnp.concatenate([window[:, 1:], first[:, None]], axis=1)
+    window = prompt_window(prompts, scfg.ctx_window)
+    meta = first_token_meta(dec, scfg, key, t_logits[:, -1], window,
+                            tcfg.vocab)
     hist = jnp.zeros((B, scfg.history_cap), jnp.uint32)
-    hist = hist.at[:, 0].set(ctx0)
+    hist = hist.at[:, 0].set(meta["last_ctx"])
     # per-sequence positions from the start (divergent acceptance later)
     t_cache = dict(t_cache, pos=jnp.full((B,), S0, jnp.int32))
     d_cache = dict(d_cache, pos=jnp.full((B,), S0, jnp.int32))
-    yd_seed = jax.vmap(
-        lambda ch: prf.wm_seed(key, ch, prf.STREAM_DRAFT))(ctx0)
-    yt_seed = jax.vmap(
-        lambda ch: prf.wm_seed(key, ch, prf.STREAM_TARGET))(ctx0)
     return {
         "t_cache": t_cache,
         "d_cache": d_cache,
-        "window": window,          # (B, c) — ends at the pending last token
-        "last": first,             # (B,) committed but not yet consumed
-        # slot-0 metadata of ``last`` (resume path: never recomputed from
-        # the prompt tail) — the context it was sampled under, its recorded
-        # acceptance coin, its repeated-context flag, and its detection
-        # statistics under the draft/target streams.
-        "last_ctx": ctx0,
-        "last_u": jax.vmap(lambda ch: prf.accept_uniform(key, ch))(ctx0),
-        "last_msk": jnp.zeros((B,), bool),
-        "last_yd": _token_stat_batch(dec, yd_seed, first, tcfg.vocab),
-        "last_yt": _token_stat_batch(dec, yt_seed, first, tcfg.vocab),
+        **meta,
         "n_committed": jnp.full((B,), S0 + 1, jnp.int32),
         "hist": hist,              # (B, H) used context hashes
         "hist_n": jnp.ones((B,), jnp.int32),
+        "step_idx": jnp.zeros((), jnp.int32),
+    }
+
+
+def init_empty_paged_state(tcfg: ModelConfig, dcfg: ModelConfig,
+                           scfg: SpecConfig, batch: int, *, num_pages: int,
+                           page_size: int, max_pages: int,
+                           cache_dtype=None) -> Dict[str, Any]:
+    """A zeroed engine state over block-paged KV pools — no prefill has
+    happened; every slot starts with an all-null page table (page 0), so
+    frozen-slot writes land in the null page and the position gate hides
+    them.  The scheduler's chunked admission fills slots in place
+    (``Scheduler`` with ``page_size=``): per-slot prompt chunks advance
+    ``pos`` through ``extend_step`` and a finalize step samples the first
+    token bit-identically to ``init_state``."""
+    dec = make_decoder(scfg)
+    S = dec.stat_dim
+    B = batch
+    dtype = cache_dtype or jnp.float32
+    t_cache = M.init_paged_cache(tcfg, B, num_pages, page_size, max_pages,
+                                 dtype)
+    d_cache = M.init_paged_cache(dcfg, B, num_pages, page_size, max_pages,
+                                 dtype)
+    return {
+        "t_cache": t_cache,
+        "d_cache": d_cache,
+        "window": jnp.zeros((B, scfg.ctx_window), jnp.int32),
+        "last": jnp.zeros((B,), jnp.int32),
+        "last_ctx": jnp.zeros((B,), jnp.uint32),
+        "last_u": jnp.zeros((B,), jnp.float32),
+        "last_msk": jnp.zeros((B,), bool),
+        "last_yd": jnp.zeros((B, S), jnp.float32),
+        "last_yt": jnp.zeros((B, S), jnp.float32),
+        "n_committed": jnp.zeros((B,), jnp.int32),
+        "hist": jnp.zeros((B, scfg.history_cap), jnp.uint32),
+        "hist_n": jnp.zeros((B,), jnp.int32),
         "step_idx": jnp.zeros((), jnp.int32),
     }
 
@@ -1056,7 +1112,10 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                    max_tokens: Optional[int] = None,
                    max_prompt_len: Optional[int] = None,
                    eos_id: Optional[int] = None, sync_every: int = 8,
-                   mesh=None, shard_params: bool = True):
+                   mesh=None, shard_params: bool = True,
+                   page_size: Optional[int] = None,
+                   num_pages: Optional[int] = None,
+                   prefill_chunk: Optional[int] = None):
     """Continuous batching: serve a whole request list through ``batch``
     live slots, admitting queued prompts into freed slots at sync points
     of the device-resident loop (see ``serve.scheduler``).
@@ -1067,6 +1126,10 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     buffers (default: the max over the requests).  Returns a list of
     ``scheduler.RequestResult`` in uid (submission) order; each result is
     bit-identical to a solo ``generate()`` of its prompt/key.
+
+    ``page_size`` switches the KV caches to the block-paged pool
+    (``num_pages`` pages shared by all slots, prompts admitted in
+    ``prefill_chunk``-token chunks between decode sync points).
     """
     from repro.serve.scheduler import Scheduler, as_request
 
@@ -1079,6 +1142,7 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                       key=key, max_tokens=max_tokens,
                       max_prompt_len=max_prompt_len, eos_id=eos_id,
                       sync_every=sync_every, mesh=mesh,
-                      shard_params=shard_params)
+                      shard_params=shard_params, page_size=page_size,
+                      num_pages=num_pages, prefill_chunk=prefill_chunk)
     sched.submit_many(reqs)
     return sched.run()

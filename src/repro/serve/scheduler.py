@@ -13,6 +13,20 @@ rows).  This module adds the multi-request serving layer on top:
   prefilled into the freed slots of the *live* batch state (a batch-1
   prefill scattered into slot ``b`` of every state/buffer row).
 
+Passing ``page_size=`` switches the KV caches from dense ``(L, B,
+max_seq, ...)`` rectangles to the **block-paged pool** (``num_pages``
+fixed pages shared by every slot; per-slot page tables; see
+``models.transformer.init_paged_cache`` and ``docs/serving.md``).  Slots
+then decouple from memory: a slot holds only the pages its committed
+prefix needs (grown incrementally at sync points), so ``batch`` can far
+exceed what dense worst-case rows would fit.  Admission also changes:
+prompts prefill in fixed ``prefill_chunk``-token chunks, **one chunk per
+sync round**, interleaved with the decode loop — a giant prompt cannot
+stall the continuous batch, and every admission compiles exactly one
+chunk-shaped ``extend_step`` instead of one prefill per distinct prompt
+length.  The slot-isolation contract is unchanged and still enforced
+bit-exactly against dense solo ``generate()``.
+
 The correctness contract is **slot isolation**: a request's committed
 tokens, provenance flags (``src``), acceptance coins, context hashes and
 repeated-context masks are bit-identical to a solo ``engine.generate()``
@@ -137,6 +151,58 @@ class _Slot:
     request: Optional[Request] = None
 
 
+class PageAllocator:
+    """Host-side free-list allocator over the physical KV page pool.
+
+    Page 0 is the reserved **null page**: it is never handed out, and an
+    all-zero page-table row aliases every logical page to it — so freed
+    slots (whose frozen loop iterations still write k/v) scribble into
+    garbage no reader ever attends, instead of into pages that may have
+    been reallocated to a new request.  The allocatable set is therefore
+    ``{1, .., num_pages - 1}``.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError(f"num_pages must be >= 2 (page 0 is the "
+                             f"reserved null page), got {num_pages}")
+        self.num_pages = num_pages
+        # stored descending so pop() hands out ascending ids (stable,
+        # test-friendly); correctness never depends on the order
+        self._free = list(range(num_pages - 1, 0, -1))
+        self._used: set = set()
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` pages off the free list; raises ``RuntimeError`` on
+        exhaustion (never hands out the null page or a page twice)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            raise RuntimeError(
+                f"KV page pool exhausted: need {n} pages, "
+                f"{len(self._free)} of {self.num_pages - 1} free")
+        out = [self._free.pop() for _ in range(n)]
+        self._used.update(out)
+        return out
+
+    def free(self, pages: Sequence[int]) -> None:
+        """Return pages; double-frees and foreign ids raise."""
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"freeing page {p} that is not allocated "
+                                 "(double free, null page, or foreign id)")
+            self._used.remove(p)
+            self._free.append(p)
+
+
 def _write_slot_fn(state: Dict[str, Any], sub: Dict[str, Any], b
                    ) -> Dict[str, Any]:
     """Scatter a batch-1 engine state into slot ``b`` of the live state.
@@ -174,20 +240,37 @@ class Scheduler:
     does — admission scatters into the sharded state, flush slices only
     the finished slot's rows.
 
-    Compilation note: admission prefills the raw prompt, so each *distinct
-    prompt length* compiles its own prefill (the decode loop itself is
-    shared across all requests).  For length-diverse production traffic,
-    left-pad prompts to a few bucket lengths **before submission** —
-    padding must be part of the request itself (solo ``generate`` of the
-    padded prompt is the bit-exactness reference); the scheduler never
-    pads silently, because that would change the watermark context hashes
-    of early tokens."""
+    Compilation note: dense-cache admission prefills the raw prompt, so
+    each *distinct prompt length* compiles its own prefill (the decode
+    loop itself is shared across all requests).  For length-diverse
+    production traffic either left-pad prompts to a few bucket lengths
+    **before submission** — padding must be part of the request itself
+    (solo ``generate`` of the padded prompt is the bit-exactness
+    reference); the scheduler never pads silently, because that would
+    change the watermark context hashes of early tokens — or use the
+    paged path (``page_size=``), whose chunked prefill admits every
+    prompt through one fixed ``(prefill_chunk,)``-shaped ``extend_step``
+    compile regardless of length (the chunk *padding* there is pure
+    compute shape: padded tail positions are beyond ``pos``, never hashed
+    into any context and never attended).
+
+    Paged mode (``page_size=`` + ``num_pages=``): KV lives in a shared
+    pool of fixed pages; a slot's footprint is the pages its committed
+    prefix needs, grown at sync points (``PageAllocator``).  Admission
+    runs chunked prefill, one chunk per slot per sync round, interleaved
+    with decode.  Pool exhaustion while *growing a live slot* raises
+    ``RuntimeError`` (mid-request eviction is not supported) — size
+    ``num_pages`` for the worst-case concurrently-live footprint;
+    admission itself simply waits for pages (head-of-line, FIFO kept)."""
 
     def __init__(self, t_params, d_params, tcfg: ModelConfig,
                  dcfg: ModelConfig, scfg: E.SpecConfig, *, batch: int,
                  key, max_tokens: int, max_prompt_len: int = 64,
                  eos_id: Optional[int] = None, sync_every: int = 8,
-                 mesh=None, shard_params: bool = True):
+                 mesh=None, shard_params: bool = True,
+                 page_size: Optional[int] = None,
+                 num_pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None):
         if scfg.accept != "pseudorandom":
             raise ValueError(
                 "continuous batching requires accept='pseudorandom': "
@@ -215,23 +298,65 @@ class Scheduler:
         self.max_seq = max_prompt_len + 1 + K1 * max_tokens + 2
         self.cap = max_tokens + K1 + 1
 
+        self.paged = page_size is not None
+        if self.paged:
+            if num_pages is None:
+                raise ValueError("paged KV caching needs num_pages "
+                                 "(pass page_size and num_pages together)")
+            for cfg, name in ((tcfg, "target"), (dcfg, "draft")):
+                if cfg.arch_type in ("ssm", "hybrid"):
+                    raise ValueError(
+                        f"paged KV caching needs attention caches; {name} "
+                        f"arch_type={cfg.arch_type!r} keeps O(1) recurrent "
+                        "state per slot (nothing to page)")
+            self.page_size = int(page_size)
+            self.num_pages = int(num_pages)
+            if self.page_size < 1:
+                raise ValueError(f"page_size must be >= 1, got {page_size}")
+            self.prefill_chunk = int(prefill_chunk) if prefill_chunk else 8
+            if self.prefill_chunk < 1:
+                raise ValueError(
+                    f"prefill_chunk must be >= 1, got {prefill_chunk}")
+            # logical extent of one slot's table — covers every position a
+            # slot can *read* (reads stop at pos <= max_seq; write overruns
+            # beyond the table clamp to the null page)
+            self.max_pages = -(-self.max_seq // self.page_size)
+            self._alloc = PageAllocator(self.num_pages)
+            self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
+            self._chunk_cursor = np.zeros((batch,), np.int64)
+            self._total_chunks = 0                  # deadlock bound term
+        elif num_pages is not None or prefill_chunk is not None:
+            raise ValueError("num_pages/prefill_chunk need page_size "
+                             "(paged mode)")
+
         self.queue: Deque[Request] = deque()
         self.slots = [_Slot() for _ in range(batch)]
         self.n_tok = np.zeros((batch,), np.int32)   # per-slot targets
         # observability: uids in admission order — the FIFO-fairness
         # witness asserted by the tests (result ordering itself is by uid)
         self.admit_order: List[int] = []
+        # paged-mode event log: ("admit_chunk", uid, i) / ("finalize", uid)
+        # / ("flush", uid) in wall order — the no-stall interleaving
+        # witness (short requests flush *between* a long prompt's chunks)
+        self.events: List[tuple] = []
         self.results: Dict[int, RequestResult] = {}
         self._next_uid = 0
         self._total_target = 0                      # deadlock bound
         # cumulative honest serving stats (alive slot-steps only)
         self._acc = self._emitted = self._alive = 0
 
-        # a dummy prefill gives the state its shapes; every slot starts
-        # FREE (done-masked) and is overwritten by its first admission
-        dummy = jnp.zeros((batch, min(8, max_prompt_len)), jnp.int32)
-        state = E.init_state(t_params, d_params, tcfg, dcfg, scfg, dummy,
-                             self.max_seq, key)
+        if self.paged:
+            # zeroed paged state: all-null page tables, pos 0 — slots fill
+            # in place via chunked prefill + the jitted finalize
+            state = E.init_empty_paged_state(
+                tcfg, dcfg, scfg, batch, num_pages=self.num_pages,
+                page_size=self.page_size, max_pages=self.max_pages)
+        else:
+            # a dummy prefill gives the state its shapes; every slot
+            # starts FREE (done-masked), overwritten by its first admission
+            dummy = jnp.zeros((batch, min(8, max_prompt_len)), jnp.int32)
+            state = E.init_state(t_params, d_params, tcfg, dcfg, scfg,
+                                 dummy, self.max_seq, key)
         self.carry = E.init_gen_carry(state, np.ones((batch,), np.int32),
                                       self.cap, eos_id)
         self._eos = jnp.int32(-1 if eos_id is None else eos_id)
@@ -256,6 +381,12 @@ class Scheduler:
             self._loop = E._jitted_gen_loop(tcfg, dcfg, scfg)
             self.t_params, self.d_params = t_params, d_params
         self._admit_jit = jax.jit(self._admit_fn)
+        if self.paged:
+            # each compiles exactly once: fixed (prefill_chunk,) /
+            # (max_pages,) shapes regardless of prompt length
+            self._chunk_jit = jax.jit(self._chunk_fn)
+            self._finalize_jit = jax.jit(self._finalize_fn)
+            self._set_table_jit = jax.jit(self._set_table_fn)
 
     # -- request intake ----------------------------------------------------
 
@@ -281,6 +412,8 @@ class Scheduler:
         self.queue.append(Request(prompt=prompt, n_tokens=int(n_tokens),
                                   uid=uid))
         self._total_target += int(n_tokens)
+        if self.paged:
+            self._total_chunks += -(-len(prompt) // self.prefill_chunk)
         return uid
 
     def submit_many(self, requests: Sequence) -> List[int]:
@@ -326,6 +459,8 @@ class Scheduler:
     def _admit(self) -> int:
         """Fill every FREE slot from the queue head (FIFO); returns the
         number of admissions."""
+        if self.paged:
+            return self._admit_paged()
         n = 0
         for b, slot in enumerate(self.slots):
             if not self.queue:
@@ -344,6 +479,201 @@ class Scheduler:
             self.admit_order.append(req.uid)
             n += 1
         return n
+
+    # -- paged admission: page tables + chunked prefill --------------------
+
+    def _table_row(self, b: int) -> jnp.ndarray:
+        """Slot ``b``'s (max_pages,) page-table row: its allocated pages
+        then null-page (0) padding."""
+        row = np.zeros((self.max_pages,), np.int32)
+        pages = self._slot_pages[b]
+        row[:len(pages)] = pages
+        return jnp.asarray(row)
+
+    def _set_table_fn(self, carry, b, row):
+        """Jitted: write one (max_pages,) table row into slot ``b`` of
+        both caches (one logical allocation serves both models — their
+        ``pos`` advance in lockstep, so identical rows are correct)."""
+        state = carry["state"]
+        t, d = state["t_cache"], state["d_cache"]
+        state = dict(
+            state,
+            t_cache=dict(t, page_table=t["page_table"].at[b].set(row)),
+            d_cache=dict(d, page_table=d["page_table"].at[b].set(row)))
+        return dict(carry, state=state)
+
+    def _chunk_fn(self, t_params, d_params, carry, toks, b, start_pos,
+                  new_pos):
+        """Jitted (compiles once — fixed (prefill_chunk,) shape): run one
+        prompt chunk through both models' paged ``extend_step`` for slot
+        ``b`` and return (carry, target logits (1, ck, V)).
+
+        The pools are shared, so the batch-1 sub-cache is just the full
+        pool + slot ``b``'s table row; writes land only in that slot's
+        pages.  ``new_pos`` (host: ``min(start + ck, S0)``) discards the
+        padded tail of the last chunk from ``pos`` — tail positions hold
+        garbage k/v but sit beyond ``pos``, so the position gate masks
+        them until decode overwrites them (same invariant as rolled-back
+        speculative writes in the dense cache)."""
+        from repro.models import transformer as T
+        state = carry["state"]
+
+        def run(params, cfg, cache):
+            sub = {"k": cache["k"], "v": cache["v"],
+                   "page_table": jax.lax.dynamic_slice_in_dim(
+                       cache["page_table"], b, 1, 0),
+                   "pos": jnp.full((1,), start_pos, jnp.int32)}
+            logits, sub = T.extend_step(params, cfg, toks[None], sub)
+            return logits, dict(cache, k=sub["k"], v=sub["v"],
+                                pos=cache["pos"].at[b].set(new_pos))
+
+        t_logits, t_cache = run(t_params, self.tcfg, state["t_cache"])
+        _, d_cache = run(d_params, self.dcfg, state["d_cache"])
+        state = dict(state, t_cache=t_cache, d_cache=d_cache)
+        return dict(carry, state=state), t_logits
+
+    def _finalize_fn(self, carry, key, logits, b, last_idx, window_row,
+                     n_tok_b):
+        """Jitted: sample the prefill token of slot ``b`` from its last
+        prompt-position logits and arm the slot — the paged counterpart of
+        ``_admit_fn``, sharing ``engine.first_token_meta`` with
+        ``init_state`` so both admission paths are bit-identical."""
+        dec = E.make_decoder(self.scfg)
+        state = carry["state"]
+        last_logits = jax.lax.dynamic_index_in_dim(logits, last_idx,
+                                                   axis=1, keepdims=False)
+        meta = E.first_token_meta(dec, self.scfg, key, last_logits,
+                                  window_row[None], self.tcfg.vocab)
+        pos_b = jax.lax.dynamic_index_in_dim(state["t_cache"]["pos"], b,
+                                             keepdims=False)
+        hist_row = jnp.zeros((self.scfg.history_cap,), jnp.uint32)
+        state = dict(
+            state,
+            window=state["window"].at[b].set(meta["window"][0]),
+            last=state["last"].at[b].set(meta["last"][0]),
+            last_ctx=state["last_ctx"].at[b].set(meta["last_ctx"][0]),
+            last_u=state["last_u"].at[b].set(meta["last_u"][0]),
+            last_msk=state["last_msk"].at[b].set(meta["last_msk"][0]),
+            last_yd=state["last_yd"].at[b].set(meta["last_yd"][0]),
+            last_yt=state["last_yt"].at[b].set(meta["last_yt"][0]),
+            n_committed=state["n_committed"].at[b].set(pos_b + 1),
+            hist=state["hist"].at[b].set(
+                hist_row.at[0].set(meta["last_ctx"][0])),
+            hist_n=state["hist_n"].at[b].set(1),
+        )
+        eos0 = meta["last"][0] == self._eos
+
+        def row0(buf, v0):
+            row = jnp.zeros(buf.shape[1:], buf.dtype)
+            return buf.at[b].set(row.at[0].set(v0.astype(buf.dtype)))
+
+        zero = jnp.zeros((), jnp.int32)
+        return dict(
+            carry, state=state,
+            toks=row0(carry["toks"], meta["last"][0]),
+            fd=row0(carry["fd"], zero.astype(jnp.int8)),
+            us=row0(carry["us"], meta["last_u"][0]),
+            chs=row0(carry["chs"], meta["last_ctx"][0]),
+            msk=row0(carry["msk"], meta["last_msk"][0]),
+            yd=row0(carry["yd"], meta["last_yd"][0]),
+            yt=row0(carry["yt"], meta["last_yt"][0]),
+            lens=carry["lens"].at[b].set(1),
+            eos=carry["eos"].at[b].set(eos0),
+            done=carry["done"].at[b].set(eos0 | (n_tok_b <= 1)),
+            total=carry["total"].at[b].set(0),
+            acc_total=carry["acc_total"].at[b].set(0),
+            alive_steps=carry["alive_steps"].at[b].set(0),
+        )
+
+    def _admit_paged(self) -> int:
+        """Reserve pages + page tables for queued prompts (FIFO with
+        head-of-line blocking on pool space — never reorders) and mark
+        their slots PREFILLING; the actual prompt tokens stream in via
+        ``_prefill_step``, one chunk per sync round."""
+        n = 0
+        for b, slot in enumerate(self.slots):
+            if not self.queue:
+                break
+            if slot.phase != FREE:
+                continue
+            req = self.queue[0]
+            need = -(-len(req.prompt) // self.page_size)
+            if need > self._alloc.n_free:
+                break
+            self.queue.popleft()
+            self._slot_pages[b] = self._alloc.alloc(need)
+            self.carry = self._set_table_jit(self.carry, jnp.int32(b),
+                                             self._table_row(b))
+            slot.phase, slot.request = PREFILLING, req
+            self._chunk_cursor[b] = 0
+            n += 1
+        return n
+
+    def _prefill_step(self) -> None:
+        """Advance every PREFILLING slot by ONE prompt chunk (so a long
+        prompt yields to the decode loop between chunks); the slot's last
+        chunk also runs the finalize (first-token sample) and flips it to
+        DECODING."""
+        for b, slot in enumerate(self.slots):
+            if slot.phase != PREFILLING:
+                continue
+            req = slot.request
+            S0, ck = len(req.prompt), self.prefill_chunk
+            i = int(self._chunk_cursor[b])
+            start = i * ck
+            chunk = np.zeros((ck,), np.int32)
+            chunk[:min(ck, S0 - start)] = req.prompt[start:start + ck]
+            new_pos = min(start + ck, S0)
+            self.carry, logits = self._chunk_jit(
+                self.t_params, self.d_params, self.carry,
+                jnp.asarray(chunk), jnp.int32(b), jnp.int32(start),
+                jnp.int32(new_pos))
+            self.events.append(("admit_chunk", req.uid, i))
+            self._chunk_cursor[b] = i + 1
+            if new_pos < S0:
+                continue
+            c = self.scfg.ctx_window
+            window = np.zeros((c,), np.int32)
+            window[max(c - S0, 0):] = req.prompt[-c:]
+            self.carry = self._finalize_jit(
+                self.carry, self.key, logits, jnp.int32(b),
+                jnp.int32(S0 - 1 - start), jnp.asarray(window),
+                jnp.int32(req.n_tokens))
+            self.n_tok[b] = req.n_tokens
+            slot.phase = DECODING
+            self.admit_order.append(req.uid)
+            self.events.append(("finalize", req.uid))
+
+    def _ensure_pages(self) -> None:
+        """Grow every live DECODING slot's page run to cover the next
+        decode chunk's write horizon (pos can advance ``sync_every *
+        (K+1)`` and each step writes ``K`` ahead).  Mid-request pool
+        exhaustion is fatal by design — no eviction — so it raises."""
+        if not any(s.phase == DECODING for s in self.slots):
+            return
+        pos = np.asarray(jax.device_get(
+            self.carry["state"]["t_cache"]["pos"]))
+        done = np.asarray(jax.device_get(self.carry["done"]))
+        K1 = self.scfg.K + 1
+        for b, slot in enumerate(self.slots):
+            if slot.phase != DECODING or bool(done[b]):
+                continue
+            horizon = int(pos[b]) + (self.sync_every + 1) * K1
+            need = min(-(-horizon // self.page_size), self.max_pages)
+            grow = need - len(self._slot_pages[b])
+            if grow <= 0:
+                continue
+            try:
+                self._slot_pages[b].extend(self._alloc.alloc(grow))
+            except RuntimeError as e:
+                raise RuntimeError(
+                    f"KV page pool exhausted growing live slot {b} "
+                    f"(uid={slot.request.uid}, pos={int(pos[b])}): {e}. "
+                    "Mid-request eviction is unsupported — raise "
+                    "num_pages to cover the worst-case live footprint."
+                ) from e
+            self.carry = self._set_table_jit(self.carry, jnp.int32(b),
+                                             self._table_row(b))
 
     # -- decode chunk ------------------------------------------------------
 
@@ -404,6 +734,17 @@ class Scheduler:
             out.append(res)
             slot.phase, slot.request = FREE, None
             self.n_tok[b] = 0
+            if self.paged:
+                # return the pages AND null out the slot's device table:
+                # the freed slot keeps riding the loop done-masked, and
+                # its frozen writes must land in the null page — through
+                # the stale table they would corrupt reallocated pages
+                self._alloc.free(self._slot_pages[b])
+                self._slot_pages[b] = []
+                self.carry = self._set_table_jit(
+                    self.carry, jnp.int32(b),
+                    jnp.zeros((self.max_pages,), jnp.int32))
+                self.events.append(("flush", req.uid))
         return out
 
     # -- drive -------------------------------------------------------------
@@ -414,12 +755,15 @@ class Scheduler:
     def run(self) -> List[RequestResult]:
         """Drain the queue: admit → decode chunk → flush, until every
         request completed.  Returns results in uid order."""
-        # every round either flushes a request or advances >= 1 committed
-        # token on some live slot, so this bound is unreachable unless the
-        # scheduler genuinely deadlocks
+        # every round either flushes a request, admits a prompt chunk, or
+        # advances >= 1 committed token on some live slot, so this bound
+        # is unreachable unless the scheduler genuinely deadlocks
         limit = 4 + 2 * len(self.queue) + self._total_target
+        if self.paged:
+            limit += self._total_chunks
         rounds = 0
         self._admit()
+        self._check_paged_deadlock()
         while self.queue or self._active():
             rounds += 1
             if rounds > limit:
@@ -427,16 +771,37 @@ class Scheduler:
                     f"scheduler stalled after {rounds} sync rounds "
                     f"(queue={len(self.queue)}, "
                     f"slots={[s.phase for s in self.slots]})")
+            if self.paged:
+                self._prefill_step()
+                self._ensure_pages()
             self._run_chunk()
             self._flush()
             self._admit()
+            self._check_paged_deadlock()
         return [self.results[uid] for uid in sorted(self.results)]
+
+    def _check_paged_deadlock(self) -> None:
+        """Every slot idle + a queue that admission skipped means the head
+        prompt alone overflows the pool — waiting can never help."""
+        if not (self.paged and self.queue) or self._active():
+            return
+        req = self.queue[0]
+        need = -(-len(req.prompt) // self.page_size)
+        raise RuntimeError(
+            f"KV page pool too small: request uid={req.uid} needs {need} "
+            f"pages for its {len(req.prompt)}-token prompt but only "
+            f"{self._alloc.n_free} of {self.num_pages - 1} allocatable "
+            "pages exist (every slot idle) — raise num_pages")
 
     def stats(self) -> Dict[str, float]:
         """Cumulative honest serving stats over flushed requests (drained
         slots never count toward the denominators)."""
         denom = max(self._alive, 1)
-        return {"served": float(len(self.results)),
-                "aatps": self._acc / denom,
-                "tokens_per_step": self._emitted / denom,
-                "alive_slot_steps": float(self._alive)}
+        out = {"served": float(len(self.results)),
+               "aatps": self._acc / denom,
+               "tokens_per_step": self._emitted / denom,
+               "alive_slot_steps": float(self._alive)}
+        if self.paged:
+            out["pages_used"] = float(self._alloc.n_used)
+            out["pages_free"] = float(self._alloc.n_free)
+        return out

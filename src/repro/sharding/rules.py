@@ -290,6 +290,13 @@ def logits_spec(mesh: Mesh, *, global_batch: int, ndim: int = 3,
 #   with S-over-model as the fallback when kv-heads don't divide (heads get
 #   first claim via the priority vector).
 _KV = ([[DP], [TP], [TP], None], [0, 2, 1, 3])
+# block-paged pools (..., num_pages, page_size, Hkv, hd): pages are a
+# *shared* arena — any slot's pages live anywhere in it, so the page dims
+# must stay replicated across dp (a dp-shard owns whole copies of the
+# pool for its slots' gathers); only kv-heads split, over "model".  The
+# page tables (B, max_pages) replicate per data shard: they are tiny
+# int32 and feed scalar-prefetch/gather indices on every shard.
+_PAGED_KV = ([None, None, [TP], None], None)
 _CACHE_RULES: Dict[str, Tuple[List[Optional[AxisCandidates]],
                               Optional[List[int]]]] = {
     "k":   _KV,
@@ -305,6 +312,7 @@ _CACHE_RULES: Dict[str, Tuple[List[Optional[AxisCandidates]],
     "att_shift": ([[DP], None], None),
     "ffn_shift": ([[DP], None], None),
     "pos": ([], None),
+    "page_table": ([], None),
 }
 
 
@@ -312,9 +320,14 @@ def cache_specs(cache_abstract, mesh: Mesh, *, global_batch: int) -> Any:
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
     # dp axes usable for this batch size
     dp = list(dp_axes(mesh, global_batch) or ())
+    # a page table marks the cache as block-paged: its k/v leaves are the
+    # shared page pool, not (L, B, S, ...) rectangles — different rule
+    paged = isinstance(cache_abstract, dict) and \
+        "page_table" in cache_abstract
 
     def resolve(name, leaf):
-        rule = _CACHE_RULES.get(name)
+        rule = _PAGED_KV if (paged and name in ("k", "v")) \
+            else _CACHE_RULES.get(name)
         if rule is None or not leaf.shape:
             return P()
         dims, prio = rule

@@ -1,0 +1,279 @@
+"""Paged serving: the slot-isolation contract over the block-paged KV
+pool + chunked prefill (bit-identical to dense solo ``generate()``), the
+one-compile admission guarantee across arbitrary prompt lengths, the
+memory decoupling (B=32 slots over a pool a quarter of their dense
+worst-case), the no-stall interleaving of long-prompt chunks with live
+decode, and intake/pool validation.  The sharded variant subprocesses
+(XLA_FLAGS must precede jax init), like tests/test_scheduler.py.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from tests.test_scheduler import (_assert_request_matches_solo,
+                                      _make_pair, _random_schedule)
+except ImportError:     # running this file as the subprocess body
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from test_scheduler import (_assert_request_matches_solo,  # noqa: F401
+                                _make_pair, _random_schedule)
+
+V = 96
+
+PAGED = dict(page_size=4, num_pages=96, prefill_chunk=4)
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return _make_pair()
+
+
+@pytest.fixture(scope="module")
+def key():
+    import jax
+    return jax.random.key(1234)
+
+
+@pytest.mark.parametrize("wm,n_req", [("gumbel", 6), ("synthid", 3)])
+def test_paged_slot_isolation_random_schedule(pair, key, wm, n_req):
+    """The acceptance invariant on the paged path: a random schedule of
+    mixed prompt lengths/targets served through the paged pool + chunked
+    prefill yields per-request streams and detection records bit-equal to
+    *dense* solo generate() runs."""
+    import jax.numpy as jnp
+    from repro.core.detection import pipeline
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark=wm)
+    reqs = _random_schedule(7, n_req)
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=key, sync_every=2, **PAGED)
+    assert len(results) == len(reqs)
+    dec = E.make_decoder(scfg)
+    for r, (prompt, n) in zip(results, reqs):
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(prompt)[None], n_tokens=n, key=key)
+        _assert_request_matches_solo(r, solo, ctx=f"paged {wm}")
+        rec_s = pipeline.records_from_generation(
+            r.as_generation_result(), dec, key, tcfg.vocab)[0]
+        rec_r = pipeline.records_from_generation(solo, dec, key,
+                                                 tcfg.vocab)[0]
+        for f in ("tokens", "y_draft", "y_target", "u", "src", "ctx"):
+            np.testing.assert_array_equal(
+                getattr(rec_s, f), getattr(rec_r, f),
+                err_msg=f"paged req {r.uid} record.{f}")
+
+
+def test_paged_eos_matches_solo(pair, key):
+    """EOS drains through the paged path bit-match solo EOS runs (early
+    frees return pages; re-admissions into recycled pages stay clean)."""
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    reqs = _random_schedule(13, 4, lo=8, hi=13)
+    probe = E.generate(tp, dp, tcfg, dcfg, scfg,
+                       jnp.asarray(reqs[0][0])[None], n_tokens=12, key=key)
+    eos = int(probe.tokens[0, 5])
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=key, sync_every=2, eos_id=eos, **PAGED)
+    for r, (prompt, n) in zip(results, reqs):
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(prompt)[None], n_tokens=n, key=key,
+                          eos_id=eos)
+        _assert_request_matches_solo(r, solo, ctx="paged eos")
+        assert r.eos == bool(solo.eos[0])
+
+
+def test_paged_admission_compiles_once(pair, key):
+    """The recompilation fix: ten requests with ten *distinct* prompt
+    lengths admit through exactly one compile of each paged admission
+    function (chunk / finalize / set-table) — the dense path would have
+    compiled ten distinct prefills.  Results stay bit-exact."""
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=6, max_prompt_len=12, sync_every=2,
+                      **PAGED)
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, V, size=n).astype(np.int32)
+               for n in range(1, 11)]
+    for p in prompts:
+        sched.submit(p, 4)
+    results = sched.run()
+    assert len(results) == 10
+    for fn in (sched._chunk_jit, sched._finalize_jit, sched._set_table_jit):
+        assert fn._cache_size() == 1, \
+            f"paged admission retraced: {fn._cache_size()} compiles"
+    for r, p in [(results[0], prompts[0]), (results[9], prompts[9])]:
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg, jnp.asarray(p)[None],
+                          n_tokens=4, key=key)
+        _assert_request_matches_solo(r, solo, ctx="compile-once")
+
+
+def sched_max_seq(scfg, max_prompt_len, max_tokens):
+    """Mirror of Scheduler.max_seq (one dense row) for pool sizing."""
+    return max_prompt_len + 1 + (scfg.K + 1) * max_tokens + 2
+
+
+def test_paged_memory_decoupling_32_slots(pair, key):
+    """The tentpole demo: 32 live slots served from a pool holding only
+    8 dense max-length rows (4x fewer KV token-slots than dense B=32
+    caching would allocate) — impossible without paging — with honest
+    AATPS accounting and bit-exact streams."""
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    B, ps, max_tokens, max_prompt_len = 32, 4, 32, 32
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=B, key=key,
+                      max_tokens=max_tokens, max_prompt_len=max_prompt_len,
+                      sync_every=2, page_size=ps,
+                      num_pages=8 * sched_max_seq(scfg, max_prompt_len,
+                                                  max_tokens) // ps,
+                      prefill_chunk=4)
+    # the pool is a quarter of the dense worst case for B=32
+    assert sched.num_pages * ps < B * sched.max_seq // 2
+    rng = np.random.default_rng(9)
+    reqs = [(rng.integers(1, V, size=6).astype(np.int32), 4)
+            for _ in range(B)]
+    for p, n in reqs:
+        sched.submit(p, n)
+    results = sched.run()
+    assert len(results) == B
+    # honest AATPS: cumulative stats equal the per-request tallies
+    stats = sched.stats()
+    acc = sum(r.n_accepted for r in results)
+    alive = sum(r.alive_steps for r in results)
+    assert stats["aatps"] == pytest.approx(acc / max(alive, 1))
+    assert stats["pages_used"] == 0 and sched._alloc.n_used == 0
+    for r, (p, n) in list(zip(results, reqs))[:3] + [(results[-1],
+                                                      reqs[-1])]:
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg, jnp.asarray(p)[None],
+                          n_tokens=n, key=key)
+        _assert_request_matches_solo(r, solo, ctx="b32")
+
+
+def test_paged_long_prompt_does_not_stall_decode(pair, key):
+    """Chunked-prefill liveness: a 32-token prompt admits over 8 chunks
+    while concurrent short requests keep committing — shorts FLUSH between
+    the long prompt's chunks (event-log witness), and the long request
+    itself still bit-matches its solo run."""
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=8, max_prompt_len=32, sync_every=2,
+                      page_size=4, num_pages=96, prefill_chunk=4)
+    rng = np.random.default_rng(11)
+    long_prompt = rng.integers(1, V, size=32).astype(np.int32)
+    long_uid = sched.submit(long_prompt, 4)
+    shorts = [(sched.submit(rng.integers(1, V, size=4).astype(np.int32), 2),
+               ) for _ in range(4)]
+    results = sched.run()
+    assert len(results) == 5
+
+    chunk_rounds = [i for i, e in enumerate(sched.events)
+                    if e[0] == "admit_chunk" and e[1] == long_uid]
+    assert len(chunk_rounds) == 8                # 32 tokens / 4 per chunk
+    short_uids = {u for (u,) in shorts}
+    flushes_between = [
+        i for i, e in enumerate(sched.events)
+        if e[0] == "flush" and e[1] in short_uids
+        and chunk_rounds[0] < i < chunk_rounds[-1]]
+    assert flushes_between, (
+        "no short request flushed between the long prompt's chunks — "
+        f"decode stalled; events={sched.events}")
+    solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                      jnp.asarray(long_prompt)[None], n_tokens=4, key=key)
+    _assert_request_matches_solo(
+        next(r for r in results if r.uid == long_uid), solo, ctx="long")
+
+
+def test_paged_validation_and_pool_exhaustion(pair, key):
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    with pytest.raises(ValueError, match="num_pages"):
+        Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key, max_tokens=4,
+                  page_size=4)
+    with pytest.raises(ValueError, match="page_size"):
+        Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key, max_tokens=4,
+                  num_pages=16)
+    from repro.configs import get_smoke_config
+    ssm_cfg = get_smoke_config("rwkv6-3b", vocab=V)
+    with pytest.raises(ValueError, match="recurrent"):
+        Scheduler(tp, dp, ssm_cfg, dcfg, scfg, batch=2, key=key,
+                  max_tokens=4, page_size=4, num_pages=16)
+    # a prompt whose pages can never fit fails loudly instead of hanging
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=4, max_prompt_len=16, sync_every=2,
+                      page_size=4, num_pages=3, prefill_chunk=4)
+    sched.submit(np.arange(1, 14, dtype=np.int32), 2)
+    with pytest.raises(RuntimeError, match="pool too small"):
+        sched.run()
+
+
+def test_paged_slot_isolation_sharded():
+    """The paged acceptance invariant on the mesh path: the same schedule
+    served paged with ``mesh=`` on a forced 8-device CPU mesh is bit-equal
+    to dense solo single-device runs (subprocess: XLA_FLAGS must precede
+    jax init)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = (os.path.join(here, "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, os.path.abspath(__file__),
+                          "gumbel"],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    assert out.returncode == 0, f"\n--- stdout ---\n{out.stdout}" \
+                                f"\n--- stderr ---\n{out.stderr}"
+    assert "PAGED SCHEDULER SHARDED PARITY OK gumbel" in out.stdout, \
+        out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Subprocess body: sharded paged scheduler parity (8 fake CPU devices).
+# ---------------------------------------------------------------------------
+
+
+def _main(wms):
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import engine as E
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_host_mesh(data=4, model=1)
+    tcfg, dcfg, tp, dp = _make_pair()
+    key = jax.random.key(1234)
+    for wm in wms:
+        scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+        reqs = _random_schedule(11, 6, lo=4, hi=10, plen_lo=6, plen_hi=7)
+        results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=4,
+                                   key=key, sync_every=2, mesh=mesh,
+                                   shard_params=False, **PAGED)
+        assert len(results) == len(reqs)
+        for r, (prompt, n) in zip(results, reqs):
+            solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                              jnp.asarray(prompt)[None], n_tokens=n,
+                              key=key)
+            _assert_request_matches_solo(r, solo, ctx=f"paged sharded {wm}")
+        print(f"PAGED SCHEDULER SHARDED PARITY OK {wm}")
+
+
+if __name__ == "__main__":
+    _main(sys.argv[1:] or ["gumbel"])
