@@ -7,15 +7,17 @@ PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 export PYTHONPATH
 
 # Coverage is a dev extra (requirements-dev.txt): when pytest-cov is
-# installed, ci-quick reports coverage of the serving subsystem AND the
+# installed, ci-quick reports coverage of the serving subsystem, the
 # Pallas kernel layer (src/repro/serve + src/repro/kernels — the fused
 # verification tails, the paged-decode attention kernel
-# (kernels/paged_attention.py) and their mirrors are the
-# correctness-critical hot path) and enforces a combined floor; without
-# it the same tests run uninstrumented (e.g. the baked-in container
+# (kernels/paged_attention.py) and their mirrors) AND the algorithmic
+# core (src/repro/core — PRF streams, watermark decoders, detection,
+# strength/trade-off theory) and enforces a combined floor; without it
+# the same tests run uninstrumented (e.g. the baked-in container
 # toolchain).
 COV := $(shell python -c "import pytest_cov" 2>/dev/null && echo \
 	--cov=src/repro/serve --cov=src/repro/kernels \
+	--cov=src/repro/core \
 	--cov-report=term-missing --cov-fail-under=80)
 
 .PHONY: test test-quick bench-quick bench ci ci-quick

@@ -55,19 +55,22 @@ def run(verbose=True):
                  "us_per_call": round(t * 1e6, 1),
                  "ref_us": round(t_ref * 1e6, 1), "exact": match})
 
-    # fused watermarked tail (verify + residual/bonus race + seen switch)
+    # fused watermarked tail (verify + residual/bonus race + seen switch);
+    # per-row key words + ctx hashes — seeds are chained in-kernel
     pw = jax.nn.softmax(jax.random.normal(jax.random.key(6), (B, K + 1, V)))
-    wms = jax.random.bits(jax.random.key(7), (B, K + 1), dtype=jnp.uint32)
-    pls = jax.random.bits(jax.random.key(8), (B, K + 1), dtype=jnp.uint32)
+    keyr = jax.random.bits(jax.random.key(7), (B,), dtype=jnp.uint32)
+    ctxh = jax.random.bits(jax.random.key(8), (B, K + 1), dtype=jnp.uint32)
     seen = (jax.random.uniform(jax.random.key(9), (B, K + 1)) < 0.2)
     # interpret=True: measure the staged Pallas program, not the CPU
     # fast-path mirror (which IS the ref)
     t, outs_k = common.timer(
-        lambda: ops.spec_verify_wm(pw, q, toks, u, wms, pls, seen,
+        lambda: ops.spec_verify_wm(pw, q, toks, u, keyr, ctxh, seen,
                                    interpret=True))
     t_ref, outs_r = common.timer(
-        lambda: jax.jit(ref.spec_verify_wm_ref)(pw, q, toks, u, wms, pls,
-                                                seen))
+        lambda: jax.jit(ref.spec_verify_wm_ref,
+                        static_argnames=("streams",))(
+            pw, q, toks, u, keyr, ctxh, seen,
+            streams=ops.DEFAULT_STREAMS))
     match = all(np.allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
                 for a, b in zip(outs_k, outs_r))
     rows.append({"kernel": "spec_verify_wm", "B": B, "V": V,

@@ -16,7 +16,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,tab1,fig2,kernels,spec_step,"
-                         "paged_decode,roofline")
+                         "spec_step_keyed,paged_decode,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="reduced sample counts (CI mode)")
     ap.add_argument("--quick", action="store_true",
@@ -26,7 +26,7 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
-        only = {"kernels", "spec_step", "paged_decode"}
+        only = {"kernels", "spec_step", "spec_step_keyed", "paged_decode"}
 
     def want(name):
         return only is None or name in only
@@ -62,6 +62,10 @@ def main() -> None:
     if want("spec_step"):
         from benchmarks import spec_step_bench
         section("spec_step", lambda: spec_step_bench.run(quick=args.quick))
+    if want("spec_step_keyed"):
+        from benchmarks import spec_step_bench
+        section("spec_step_keyed",
+                lambda: spec_step_bench.run_keyed(quick=args.quick))
     if want("paged_decode"):
         from benchmarks import spec_step_bench
         section("paged_decode",

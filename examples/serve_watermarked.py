@@ -108,7 +108,9 @@ def main():
     args = ap.parse_args()
 
     tcfg, dcfg, tp, dp, cp = common.train_pair()
-    key = jax.random.key(11)
+    # demo seed: see quickstart.py — the tiny char model is loop-prone
+    # under deterministic watermarks, so the demo key must not degenerate
+    key = jax.random.key(7)
 
     print(f"serving {args.batches} batches x {args.batch} requests x "
           f"{args.tokens} tokens, K={args.k}")

@@ -24,7 +24,7 @@ import numpy as np
 from repro.core import prf
 from repro.core.detection.records import SeqRecord
 from repro.core.watermark.base import Decoder
-from repro.serve.engine import GenerationResult, key_fingerprint
+from repro.serve.engine import GenerationResult
 
 
 def recover_u(key, ctx_hashes: np.ndarray) -> np.ndarray:
@@ -58,20 +58,22 @@ def records_from_generation(res: GenerationResult, dec: Decoder, key,
     out: List[SeqRecord] = []
     B = res.tokens.shape[0]
     # served stats are only trusted when recorded under the SAME decoder
-    # (name + stat width) and the SAME PRF key — a wrong-key detection run
-    # (false-positive calibration) must re-recover, not echo the
-    # generation-time statistics
-    served = (use_served and res.y_draft is not None
-              and res.stat_scheme == dec.name
-              and res.y_draft.shape[-1] == dec.stat_dim
-              and res.stat_key is not None
-              and res.stat_key == key_fingerprint(key))
+    # (name + stat width) and — per row, since batches may mix keys — the
+    # SAME PRF key word.  A wrong-key detection run (false-positive
+    # calibration, or scoring slot b under slot c's key) must re-recover,
+    # not echo the generation-time statistics.
+    scheme_ok = (use_served and res.y_draft is not None
+                 and res.stat_scheme == dec.name
+                 and res.y_draft.shape[-1] == dec.stat_dim
+                 and res.keys is not None)
+    key_word = int(np.asarray(jax.device_get(prf.as_key_word(key))))
     for b in range(B):
         n = int(res.lengths[b])
         if n_tokens is not None:
             n = min(n, n_tokens)
         toks = res.tokens[b, :n]
         hashes = res.ctx_hashes[b, :n]
+        served = scheme_ok and int(res.keys[b]) == key_word
         if served:
             y_d = _squeeze_stat(np.asarray(res.y_draft[b, :n]), dec)
             y_t = _squeeze_stat(np.asarray(res.y_target[b, :n]), dec)

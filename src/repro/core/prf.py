@@ -9,17 +9,20 @@ streams:
     ζ^T — target / residual / bonus sampling
     ζ^R — the pseudorandom acceptance coin (the paper's new ingredient)
 
-We realise F with JAX's threefry: ``fold_in(key, context_hash)`` then
-``fold_in(·, stream_id)``.  Everything here is jit-able and vmappable, and
-the same functions run at *detection* time to recover ζ from observed text.
+We realise F with the integer counter PRF itself: a key is a single
+``uint32`` *key word* and the (key, stream, context) -> seed map is a
+two-link chain of the in-kernel hash (``_chain``).  That makes the key a
+first-class per-slot tensor — a ``(B,)`` row of key words rides in the
+jitted engine state, broadcasts elementwise against per-slot context
+hashes, and the Pallas kernels re-derive the very same seeds from the key
+row in VMEM.  ``as_key_word`` accepts legacy ``jax.random.key`` objects
+(collapsed deterministically to a word) so callers keep passing either.
 
-A second, integer-only PRF (`hash_u32`) mirrors the in-kernel hash used by
-the Pallas kernels so kernel and oracle agree bit-exactly.
+The same functions run at *detection* time to recover ζ from observed
+text, and `hash_u32` mirrors the in-kernel hash used by the Pallas
+kernels so kernel and oracle agree bit-exactly.
 """
 from __future__ import annotations
-
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -30,6 +33,7 @@ STREAM_DRAFT = 0xD0
 STREAM_TARGET = 0x7A
 STREAM_ACCEPT = 0x5E
 STREAM_PLAIN = 0x99   # non-watermark randomness (e.g. finite-m synthid draw)
+STREAM_GAMMA = 0x6A   # strength-gate coins (per-position γ watermark gate)
 
 _MIX = np.uint32(0x9E3779B9)   # golden-ratio odd constant
 
@@ -68,37 +72,82 @@ def sliding_context_hashes(tokens: jnp.ndarray, c: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# JAX-key PRF (used by the pure-JAX watermark decoders)
+# Key words and the per-stream seed chain
 # ---------------------------------------------------------------------------
 
 
-def stream_key(key: jax.Array, ctx_hash: jnp.ndarray, stream: int):
-    """Derive the per-position, per-stream threefry key."""
-    k = jax.random.fold_in(key, ctx_hash.astype(jnp.uint32))
-    return jax.random.fold_in(k, stream)
+def _chain(seed, counter) -> jnp.ndarray:
+    """One link of the seed chain: absorb ``counter`` into ``seed``.
+
+    Identical to the mixing step of ``kernel_uniform`` (and of the Pallas
+    kernels' ``_seed_chain``), so seeds derived on the host and re-derived
+    from a key row inside a kernel agree bit-exactly.  Elementwise —
+    broadcasts, so a ``(B, 1)`` key column chains against ``(B, K)``
+    context hashes without a vmap."""
+    s = jnp.asarray(seed).astype(jnp.uint32)
+    c = jnp.asarray(counter).astype(jnp.uint32)
+    return hash_u32(s * _MIX ^ hash_u32(c))
 
 
-def uniform_from(key: jax.Array, ctx_hash, stream: int, shape=()):
-    """U(0,1) draws for stream ``stream`` at context ``ctx_hash``."""
-    return jax.random.uniform(stream_key(key, ctx_hash, stream), shape)
+def as_key_word(key) -> jnp.ndarray:
+    """Collapse any accepted key form to uint32 key word(s).
+
+    Accepts a python int, a uint32 scalar/array of key words (returned
+    unchanged), or a typed ``jax.random`` key (possibly batched), which is
+    collapsed deterministically by chaining its underlying data words —
+    so legacy ``jax.random.key(s)`` call sites keep a stable identity."""
+    if isinstance(key, (int, np.integer)):
+        return jnp.uint32(np.uint32(key))
+    arr = jnp.asarray(key)
+    if jnp.issubdtype(arr.dtype, jax.dtypes.prng_key):
+        data = jax.random.key_data(arr).astype(jnp.uint32)
+        w = jnp.zeros(data.shape[:-1], jnp.uint32)
+        for i in range(data.shape[-1]):
+            w = _chain(w, data[..., i])
+        return w
+    return arr.astype(jnp.uint32)
 
 
-def wm_seed(key, ctx_hash, stream: int) -> jnp.ndarray:
-    """uint32 seed for the integer counter PRF, derived from the threefry
-    stream key.  The (key, context, stream) -> seed map stays threefry (so
-    streams are cryptographically decorrelated) while the per-token uniform
-    expansion uses ``kernel_uniform`` — bit-exact with the Pallas kernels,
-    which receive these seeds as scalars and expand them in VMEM."""
-    return jax.random.bits(stream_key(key, ctx_hash, stream),
-                           dtype=jnp.uint32)
+def as_key_words(key, batch: int) -> jnp.ndarray:
+    """Normalize ``key`` (scalar-or-batched, any accepted form) to a
+    ``(batch,)`` uint32 key-word row — the engine-state representation."""
+    w = as_key_word(key)
+    if w.ndim == 0:
+        w = jnp.broadcast_to(w, (batch,))
+    if w.shape != (batch,):
+        raise ValueError(f"key words shape {w.shape} != ({batch},)")
+    return w
+
+
+def uniform_from(key, ctx_hash, stream, shape=()):
+    """U(0,1) draws for stream ``stream`` at context ``ctx_hash``.
+
+    With the default scalar shape the context hash itself is the counter
+    (one hash link cheaper); a non-trivial ``shape`` expands counters
+    0..n-1 from the fully-chained seed."""
+    seed = _chain(as_key_word(key), stream)
+    if shape == ():
+        return kernel_uniform(seed, ctx_hash)
+    n = int(np.prod(shape)) if shape else 1
+    base = _chain(seed, ctx_hash)
+    return kernel_uniform(base, jnp.arange(n, dtype=jnp.uint32)).reshape(shape)
+
+
+def wm_seed(key, ctx_hash, stream) -> jnp.ndarray:
+    """uint32 seed for the integer counter PRF: chain the stream id, then
+    the context hash, onto the key word.  Stream first, so a kernel holding
+    a per-row key word can precompute the per-stream seed once and chain
+    only the per-slot context in VMEM.  ``stream`` may be a traced uint32
+    array (per-row stream selection); broadcasting is elementwise."""
+    return _chain(_chain(as_key_word(key), stream), ctx_hash)
 
 
 def gumbel_uniforms(key, ctx_hash, stream: int, vocab: int):
     """The (U_w)_{w in vocab} vector of the Gumbel-max watermark.
 
-    Expanded with the integer counter PRF from a threefry-derived seed, so
+    Expanded with the integer counter PRF from the chained ``wm_seed``, so
     the same uniforms are reproducible inside the fused Pallas kernels (and
-    at detection time) from the scalar ``wm_seed``."""
+    at detection time) from the per-row key word."""
     w = jnp.arange(vocab, dtype=jnp.uint32)
     return kernel_uniform(wm_seed(key, ctx_hash, stream), w)
 
@@ -106,8 +155,8 @@ def gumbel_uniforms(key, ctx_hash, stream: int, vocab: int):
 def synthid_gbits(key, ctx_hash, stream: int, m: int, vocab: int):
     """The m Bernoulli(0.5) g-vectors of SynthID: (m, vocab) in {0,1}.
 
-    Expanded with the integer counter PRF (counter ``w + vocab·l``) from a
-    threefry-derived seed — the exact program of the Pallas tournament
+    Expanded with the integer counter PRF (counter ``w + vocab·l``) from
+    the chained ``wm_seed`` — the exact program of the Pallas tournament
     kernels, so host sampling, detection and the fused verification tail
     agree bit-exactly (mirroring the gumbel-uniform unification)."""
     seed = wm_seed(key, ctx_hash, stream)

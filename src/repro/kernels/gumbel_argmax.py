@@ -41,6 +41,17 @@ def _uniform(seed, counter):
         1.0 / (1 << 24)) + np.float32(1.0 / (1 << 25))
 
 
+def _seed_chain(seed, counter):
+    """One link of the key -> stream -> context seed chain, in-kernel.
+
+    Bit-exact mirror of ``repro.core.prf._chain``: kernels re-derive the
+    per-slot PRF seeds from a per-row uint32 key word resident in VMEM
+    (``chain(chain(key, stream), ctx)``) instead of receiving host-derived
+    seed tensors."""
+    return _hash_u32(jnp.asarray(seed).astype(jnp.uint32) * _MIX
+                     ^ _hash_u32(jnp.asarray(counter).astype(jnp.uint32)))
+
+
 def _kernel(probs_ref, seed_ref, tok_ref, u_ref, *, vocab: int):
     probs = probs_ref[...].astype(jnp.float32)          # (bm, Vp)
     bm, vp = probs.shape

@@ -11,10 +11,19 @@ from functools import partial
 
 import jax
 
+from repro.core import prf as _prf
 from repro.kernels.gumbel_argmax import gumbel_argmax_kernel
 from repro.kernels.spec_verify import (spec_verify_kernel,
                                        spec_verify_wm_kernel)
-from repro.kernels.tournament import tournament_kernel
+from repro.kernels.tournament import (tournament_kernel,
+                                      tournament_keyed_kernel)
+
+# default PRF streams of the watermarked verification tail: the ζ^T
+# watermark stream, the plain residual/bonus fallback streams (repeated
+# contexts), and the finite-m tournament draw stream
+DEFAULT_STREAMS = (_prf.STREAM_TARGET, _prf.STREAM_PLAIN + 2,
+                   _prf.STREAM_PLAIN + 3,
+                   _prf.STREAM_PLAIN + _prf.STREAM_TARGET)
 
 
 def _interpret_default() -> bool:
@@ -37,6 +46,23 @@ def tournament(probs, seeds, *, m: int = 30, block_rows: int = 4,
                              interpret=interpret)
 
 
+@partial(jax.jit, static_argnames=("stream", "m", "block_rows",
+                                   "interpret"))
+def tournament_keyed(probs, keys, ctx_hashes, *, stream: int, m: int = 30,
+                     block_rows: int = 4, interpret: bool | None = None):
+    """Per-row keyed tournament: g-seeds derived in-kernel from the (B,)
+    key-word row (multi-tenant batches).  CPU default is the bit-exact jnp
+    mirror (``ref.tournament_keyed_ref``)."""
+    if interpret is None and _interpret_default():
+        from repro.kernels import ref as _ref
+        return _ref.tournament_keyed_ref(probs, keys, ctx_hashes,
+                                         stream=stream, m=m)
+    interpret = False if interpret is None else interpret
+    return tournament_keyed_kernel(probs, keys, ctx_hashes, stream=stream,
+                                   m=m, block_rows=block_rows,
+                                   interpret=interpret)
+
+
 @partial(jax.jit, static_argnames=("interpret",))
 def spec_verify(p, q, draft_tokens, u, resid_seeds, *,
                 interpret: bool | None = None):
@@ -45,25 +71,25 @@ def spec_verify(p, q, draft_tokens, u, resid_seeds, *,
                               interpret=interpret)
 
 
-def _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds, plain_seeds,
-                          seen, live, draw_seeds, *, tail,
+def _spec_verify_wm_local(p, q, draft_tokens, u, keys, ctx_hashes,
+                          seen, live, *, streams, tail,
                           interpret: bool | None):
     """Single-shard body of ``spec_verify_wm`` (grid spans the local batch)."""
     if interpret is None and _interpret_default():
         from repro.kernels import ref as _ref
-        return _ref.spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds,
-                                       plain_seeds, seen, live, draw_seeds,
-                                       tail=tail)
+        return _ref.spec_verify_wm_ref(p, q, draft_tokens, u, keys,
+                                       ctx_hashes, seen, live,
+                                       streams=streams, tail=tail)
     interpret = False if interpret is None else interpret
-    return spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds,
-                                 plain_seeds, seen, live, draw_seeds,
+    return spec_verify_wm_kernel(p, q, draft_tokens, u, keys, ctx_hashes,
+                                 seen, live, streams=streams,
                                  tail=tail, interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret", "mesh", "batch_axes",
-                                   "tail"))
-def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
-                   live=None, draw_seeds=None, *,
+                                   "tail", "streams"))
+def spec_verify_wm(p, q, draft_tokens, u, keys, ctx_hashes, seen,
+                   live=None, *, streams=None,
                    interpret: bool | None = None, mesh=None,
                    batch_axes: tuple | None = None, tail=None):
     """Fused watermarked verification tail.  On TPU this stages the Mosaic
@@ -73,11 +99,19 @@ def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
     than the XLA-compiled mirror.  Pass ``interpret=True`` to force the
     interpreter (kernel validation).
 
+    ``keys`` is the (B,) uint32 per-row key-word tensor and ``ctx_hashes``
+    the (B, K+1) per-slot context hashes; the per-slot PRF seeds are
+    re-derived inside the kernel/mirror from ``streams`` — the static
+    ``(wm_stream, plain_resid, plain_bonus, draw_stream)`` tuple (default
+    ``DEFAULT_STREAMS``; schemes with a different ζ^T stream pass their
+    own).  Mixed-key batches are first-class: the key is data, not a
+    compile-time constant.
+
     ``tail`` is the scheme's ``watermark.base.FusedTail`` declaration
     (static; default = the Gumbel race).  kind="tournament" tails run the
-    in-kernel m-round SynthID tournament and consume ``draw_seeds``
-    (B, K+1) finite-m draw coins; the 4th output is then the emitted
-    token's (B, m) g-bit statistics instead of the (B,) race uniform.
+    in-kernel m-round SynthID tournament, drawing the finite-m race coins
+    from ``draw_stream``; the 4th output is then the emitted token's
+    (B, m) g-bit statistics instead of the (B,) race uniform.
 
     ``live`` (optional, (B,) bool/int) is the continuous-batching slot
     mask: rows with live == 0 (drained serving slots) skip the whole
@@ -89,22 +123,22 @@ def spec_verify_wm(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
     and the kernel's ``grid=(B,)`` spans the *per-shard local* batch — no
     cross-shard communication (the tail is row-independent).  The global
     batch must divide the axes' size."""
+    if streams is None:
+        streams = DEFAULT_STREAMS
     if mesh is None or not batch_axes:
-        return _spec_verify_wm_local(p, q, draft_tokens, u, wm_seeds,
-                                     plain_seeds, seen, live, draw_seeds,
-                                     tail=tail, interpret=interpret)
+        return _spec_verify_wm_local(p, q, draft_tokens, u, keys,
+                                     ctx_hashes, seen, live,
+                                     streams=streams, tail=tail,
+                                     interpret=interpret)
     import jax.numpy as jnp
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    B, K1 = wm_seeds.shape
+    B, K1 = ctx_hashes.shape
     if live is None:
         live = jnp.ones((B,), jnp.int32)
-    if draw_seeds is None:
-        assert tail is None or not tail.needs_draw_seeds, tail
-        draw_seeds = jnp.zeros((B, K1), jnp.uint32)
     spec = P(batch_axes if len(batch_axes) > 1 else batch_axes[0])
-    fn = partial(_spec_verify_wm_local, tail=tail, interpret=interpret)
-    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 9,
+    fn = partial(_spec_verify_wm_local, streams=streams, tail=tail,
+                 interpret=interpret)
+    return shard_map(fn, mesh=mesh, in_specs=(spec,) * 8,
                      out_specs=(spec,) * 4, check_rep=False)(
-        p, q, draft_tokens, u, wm_seeds, plain_seeds, seen, live,
-        draw_seeds)
+        p, q, draft_tokens, u, keys, ctx_hashes, seen, live)

@@ -47,6 +47,16 @@ def tournament_ref(probs, seeds, *, m: int = 30):
     return jax.vmap(one)(probs, seeds.astype(jnp.uint32))
 
 
+def tournament_keyed_ref(probs, keys, ctx_hashes, *, stream: int,
+                         m: int = 30):
+    """Mirror of ``tournament_keyed_kernel``: derive each row's g-seed
+    from its key word via the host seed chain, then the padded-extent
+    rounds of ``tournament_ref``."""
+    seeds = prf.wm_seed(keys.astype(jnp.uint32),
+                        ctx_hashes.astype(jnp.uint32), stream)
+    return tournament_ref(probs, seeds, m=m)
+
+
 def spec_verify_ref(p, q, draft_tokens, u, resid_seeds):
     """Mirror of spec_verify_kernel; see its docstring."""
     B, K, V = p.shape
@@ -79,12 +89,16 @@ def spec_verify_ref(p, q, draft_tokens, u, resid_seeds):
     return n_acc, prefix, rtok, ru
 
 
-def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
-                       live=None, draw_seeds=None, *, tail=None):
+def spec_verify_wm_ref(p, q, draft_tokens, u, keys, ctx_hashes, seen,
+                       live=None, *, streams, tail=None):
     """Mirror of spec_verify_wm_kernel (full watermarked Alg. 1 tail);
-    see its docstring.  p: (B, K+1, V), q: (B, K, V).  ``live`` (optional,
-    (B,)): rows with live == 0 return the kernel's zero-initialized outputs
-    (drained continuous-batching slots).  ``tail`` selects the scheme's
+    see its docstring.  p: (B, K+1, V), q: (B, K, V); keys (B,) uint32 key
+    words; ctx_hashes (B, K+1) uint32; ``streams`` the static
+    ``(wm_stream, plain_resid, plain_bonus, draw_stream)`` tuple.  Per-slot
+    seeds come from the same two-link chain the kernel runs in VMEM
+    (``prf.wm_seed``).  ``live`` (optional, (B,)): rows with live == 0
+    return the kernel's zero-initialized outputs (drained
+    continuous-batching slots).  ``tail`` selects the scheme's
     emitted-token branch (default: Gumbel race); kind="tournament" runs
     the m-round SynthID tournament at the 128-lane padded extent — the
     exact reduction extent of the kernel — via the canonical
@@ -94,6 +108,7 @@ def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
     from repro.core.watermark.base import FusedTail
     if tail is None:
         tail = FusedTail(kind="race", stat_dim=1)
+    wm_stream, plain_resid, plain_bonus, draw_stream = streams
     B, K1, V = p.shape
     K = K1 - 1
     p = p.astype(jnp.float32)
@@ -111,10 +126,13 @@ def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
     q_s = jnp.take_along_axis(q_ext, slot[:, None, None], axis=1)[:, 0]
     seen_s = jnp.take_along_axis(seen.astype(jnp.int32), slot[:, None],
                                  axis=1)[:, 0]
-    wm_s = jnp.take_along_axis(wm_seeds.astype(jnp.uint32), slot[:, None],
-                               axis=1)[:, 0]
-    pl_s = jnp.take_along_axis(plain_seeds.astype(jnp.uint32),
-                               slot[:, None], axis=1)[:, 0]
+    kw = keys.astype(jnp.uint32)
+    ctx_s = jnp.take_along_axis(ctx_hashes.astype(jnp.uint32),
+                                slot[:, None], axis=1)[:, 0]
+    pl_stream = jnp.where(slot == K, jnp.uint32(plain_bonus),
+                          jnp.uint32(plain_resid))
+    wm_s = prf.wm_seed(kw, ctx_s, wm_stream)
+    pl_s = prf.wm_seed(kw, ctx_s, pl_stream)
     r = jnp.maximum(p_s - q_s, 0.0)                     # bonus dist at slot K
     w = jnp.arange(V, dtype=jnp.uint32)
 
@@ -130,14 +148,7 @@ def spec_verify_wm_ref(p, q, draft_tokens, u, wm_seeds, plain_seeds, seen,
         etok, estat = jax.vmap(race)(r, seed_s)
     else:                           # kind == "tournament" (SynthID)
         m = tail.m
-        if draw_seeds is None:
-            # zero seeds would silently correlate every row's finite-m
-            # draw — only degenerate tournaments may omit them (the
-            # kernel path asserts identically)
-            assert not tail.needs_draw_seeds, tail
-            draw_seeds = jnp.zeros((B, K1), jnp.uint32)
-        dw_s = jnp.take_along_axis(draw_seeds.astype(jnp.uint32),
-                                   slot[:, None], axis=1)[:, 0]
+        dw_s = prf.wm_seed(kw, ctx_s, draw_stream)
 
         def tourney(r_row, sn, g_seed, dw, plc):
             pz = _synthid.tournament_padded(r_row, g_seed, m=m, vocab=V)

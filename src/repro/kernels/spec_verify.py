@@ -48,7 +48,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.gumbel_argmax import _uniform
+from repro.kernels.gumbel_argmax import _seed_chain, _uniform
 from repro.kernels.tournament import _gbit
 
 
@@ -128,10 +128,11 @@ def spec_verify_kernel(p, q, draft_tokens, u, resid_seeds, *,
     return n_acc[:, 0], acc, rtok[:, 0], ru[:, 0]
 
 
-def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, dws_ref,
+def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, key_ref, ctx_ref,
                seen_ref, live_ref, nacc_ref, acc_ref, etok_ref, estat_ref,
                *, K: int, vocab: int, kind: str, m: int, degenerate: bool,
-               stat_dim: int):
+               stat_dim: int, wm_stream: int, plain_resid: int,
+               plain_bonus: int, draw_stream: int):
     # Zero-init so non-live (drained continuous-batching slot) rows emit
     # defined outputs; the whole verification/race body is then predicated
     # off for them — a drained row costs no gather/race work on TPU.
@@ -146,9 +147,8 @@ def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, dws_ref,
         q = q_ref[0].astype(jnp.float32)    # (K, Vp)
         toks = tok_ref[0]                   # (K,)
         u = u_ref[0].astype(jnp.float32)    # (K,) acceptance coins
-        wms = wms_ref[0].astype(jnp.uint32)  # (K+1,) zeta^T stream seeds
-        pls = pls_ref[0].astype(jnp.uint32)  # (K+1,) non-watermark seeds
-        dws = dws_ref[0].astype(jnp.uint32)  # (K+1,) finite-m draw seeds
+        key = key_ref[0, 0].astype(jnp.uint32)   # this row's key word
+        ctx = ctx_ref[0].astype(jnp.uint32)      # (K+1,) context hashes
         seen = seen_ref[0]                  # (K+1,) int32 repeated-ctx mask
         kv, vp = q.shape
         w2 = jax.lax.broadcasted_iota(jnp.int32, (kv, vp), 1)
@@ -173,8 +173,16 @@ def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, dws_ref,
         q_s = jnp.sum(q * (rows_q == slot).astype(jnp.float32),
                       axis=0, keepdims=True)
         seen_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, seen, 0))
-        wm_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, wms, jnp.uint32(0)))
-        pl_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, pls, jnp.uint32(0)))
+        # per-slot PRF seeds, re-derived in VMEM from the row's key word:
+        # select the slot's context hash, then chain stream -> context.
+        # The key->stream links are per-row constants; only the final ctx
+        # link depends on the selected slot.  The plain stream differs for
+        # the bonus slot (slot == K) vs a residual slot.
+        ctx_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, ctx, jnp.uint32(0)))
+        pl_stream = jnp.where(slot == K, jnp.uint32(plain_bonus),
+                              jnp.uint32(plain_resid))
+        wm_s = _seed_chain(_seed_chain(key, jnp.uint32(wm_stream)), ctx_s)
+        pl_s = _seed_chain(_seed_chain(key, pl_stream), ctx_s)
         r = jnp.maximum(p_s - q_s, 0.0)
         wv = jax.lax.broadcasted_iota(jnp.uint32, (1, vp), 1)
 
@@ -196,8 +204,8 @@ def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, dws_ref,
             # the row at the padded-lane extent (the canon every jnp
             # mirror and the host decoder follow), then run the m rounds
             # VMEM-resident with the tournament_kernel round body.
-            dw_s = jnp.sum(jnp.where(rows_p[:, 0] == slot, dws,
-                                     jnp.uint32(0)))
+            dw_s = _seed_chain(_seed_chain(key, jnp.uint32(draw_stream)),
+                               ctx_s)
             z = jnp.sum(r)
             rn = r / jnp.maximum(z, 1e-30)             # (1, Vp)
 
@@ -233,22 +241,28 @@ def _wm_kernel(p_ref, q_ref, tok_ref, u_ref, wms_ref, pls_ref, dws_ref,
             estat_ref[0] = g_tok[0]
 
 
-def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
-                          seen, live=None, draw_seeds=None, *, tail=None,
+def spec_verify_wm_kernel(p, q, draft_tokens, u, keys, ctx_hashes,
+                          seen, live=None, *, streams, tail=None,
                           interpret: bool = False):
     """Fused watermarked verification tail of Alg. 1 (accept/reject +
     residual-or-bonus sampling) — one VMEM pass per sequence row.
 
     p: (B, K+1, V) target probs for the K verified slots plus the bonus
     slot; q: (B, K, V) draft probs; draft_tokens: (B, K) int32; u: (B, K)
-    acceptance coins; wm_seeds/plain_seeds: (B, K+1) uint32 per-slot
-    counter-PRF seeds for the ζ^T and non-watermark streams; seen: (B, K+1)
+    acceptance coins; keys: (B,) uint32 per-row watermark key words;
+    ctx_hashes: (B, K+1) uint32 per-slot context hashes; seen: (B, K+1)
     repeated-context mask (nonzero -> fall back to the plain stream).
+
+    ``streams`` (static tuple of ints ``(wm_stream, plain_resid,
+    plain_bonus, draw_stream)``) names the PRF streams; the per-slot seeds
+    are re-derived *in VMEM* from the key row via the two-link counter
+    chain (``prf.wm_seed`` mirror) — no host-derived seed tensors cross
+    HBM, and mixed-key batches cost nothing extra.
 
     ``tail`` (a ``watermark.base.FusedTail``, default the Gumbel race)
     selects the scheme's emitted-token branch; kind="tournament" tails
-    additionally consume ``draw_seeds`` (B, K+1) — the finite-m
-    categorical draw coins (ignored by races and degenerate tournaments).
+    additionally use ``draw_stream`` for the finite-m categorical draw
+    (ignored by races and degenerate tournaments).
 
     ``live`` (optional, (B,) bool/int): slot mask for continuous batching —
     rows with live == 0 (drained serving slots) skip the whole verification
@@ -266,26 +280,26 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
     B, K1, V = p.shape
     K = K1 - 1
     assert q.shape == (B, K, V), (p.shape, q.shape)
+    wm_stream, plain_resid, plain_bonus, draw_stream = (
+        int(s) for s in streams)
     if live is None:
         live = jnp.ones((B,), jnp.int32)
-    if draw_seeds is None:
-        assert not tail.needs_draw_seeds, tail
-        draw_seeds = jnp.zeros((B, K1), jnp.uint32)
     vp = -(-V // 128) * 128
     pp = jnp.zeros((B, K1, vp), p.dtype).at[:, :, :V].set(p)
     qp = jnp.zeros((B, K, vp), q.dtype).at[:, :, :V].set(q)
     outs = pl.pallas_call(
         functools.partial(_wm_kernel, K=K, vocab=V, kind=tail.kind,
                           m=tail.m, degenerate=tail.degenerate,
-                          stat_dim=tail.stat_dim),
+                          stat_dim=tail.stat_dim, wm_stream=wm_stream,
+                          plain_resid=plain_resid, plain_bonus=plain_bonus,
+                          draw_stream=draw_stream),
         grid=(B,),
         in_specs=[
             pl.BlockSpec((1, K1, vp), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, K, vp), lambda i: (i, 0, 0)),
             pl.BlockSpec((1, K), lambda i: (i, 0)),
             pl.BlockSpec((1, K), lambda i: (i, 0)),
-            pl.BlockSpec((1, K1), lambda i: (i, 0)),
-            pl.BlockSpec((1, K1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
             pl.BlockSpec((1, K1), lambda i: (i, 0)),
             pl.BlockSpec((1, 1), lambda i: (i, 0)),
@@ -304,8 +318,8 @@ def spec_verify_wm_kernel(p, q, draft_tokens, u, wm_seeds, plain_seeds,
         ],
         interpret=interpret,
     )(pp, qp, draft_tokens.astype(jnp.int32), u.astype(jnp.float32),
-      wm_seeds.astype(jnp.uint32), plain_seeds.astype(jnp.uint32),
-      draw_seeds.astype(jnp.uint32), seen.astype(jnp.int32),
+      keys.astype(jnp.uint32).reshape(B, 1),
+      ctx_hashes.astype(jnp.uint32), seen.astype(jnp.int32),
       live.astype(jnp.int32).reshape(B, 1))
     n_acc, acc, etok, estat = outs
     if tail.kind == "race":

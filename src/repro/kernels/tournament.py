@@ -19,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.gumbel_argmax import _hash_u32, _MIX
+from repro.kernels.gumbel_argmax import _hash_u32, _MIX, _seed_chain
 
 
 def _gbit(seed, counter):
@@ -27,11 +27,8 @@ def _gbit(seed, counter):
     return (bits >> np.uint32(31)).astype(jnp.float32)
 
 
-def _kernel(probs_ref, seed_ref, out_ref, *, m: int, vocab: int):
-    p = probs_ref[...].astype(jnp.float32)             # (bm, Vp)
-    bm, vp = p.shape
-    w = jax.lax.broadcasted_iota(jnp.uint32, (bm, vp), 1)
-    seeds = seed_ref[...].astype(jnp.uint32)[:, None]
+def _rounds(p, seeds, w, *, m: int, vocab: int):
+    """The m tournament rounds over a (bm, Vp) block; ``seeds`` (bm, 1)."""
     p = jnp.where(w < vocab, p, 0.0)
 
     def round_body(i, p):
@@ -40,8 +37,28 @@ def _kernel(probs_ref, seed_ref, out_ref, *, m: int, vocab: int):
         mass_one = jnp.sum(p * g, axis=-1, keepdims=True)
         return p * (1.0 + g - mass_one)
 
-    p = jax.lax.fori_loop(0, m, round_body, p)
-    out_ref[...] = p
+    return jax.lax.fori_loop(0, m, round_body, p)
+
+
+def _kernel(probs_ref, seed_ref, out_ref, *, m: int, vocab: int):
+    p = probs_ref[...].astype(jnp.float32)             # (bm, Vp)
+    bm, vp = p.shape
+    w = jax.lax.broadcasted_iota(jnp.uint32, (bm, vp), 1)
+    seeds = seed_ref[...].astype(jnp.uint32)[:, None]
+    out_ref[...] = _rounds(p, seeds, w, m=m, vocab=vocab)
+
+
+def _keyed_kernel(probs_ref, key_ref, ctx_ref, out_ref, *, m: int,
+                  vocab: int, stream: int):
+    """Same rounds, but the per-row g-seed is re-derived in VMEM from the
+    row's key word and context hash (``chain(chain(key, stream), ctx)``)."""
+    p = probs_ref[...].astype(jnp.float32)             # (bm, Vp)
+    bm, vp = p.shape
+    w = jax.lax.broadcasted_iota(jnp.uint32, (bm, vp), 1)
+    keys = key_ref[...].astype(jnp.uint32)
+    ctx = ctx_ref[...].astype(jnp.uint32)
+    seeds = _seed_chain(_seed_chain(keys, jnp.uint32(stream)), ctx)[:, None]
+    out_ref[...] = _rounds(p, seeds, w, m=m, vocab=vocab)
 
 
 def tournament_kernel(probs, seeds, *, m: int = 30, block_rows: int = 4,
@@ -65,4 +82,34 @@ def tournament_kernel(probs, seeds, *, m: int = 30, block_rows: int = 4,
         out_shape=jax.ShapeDtypeStruct((bp, vp), jnp.float32),
         interpret=interpret,
     )(probs_p, seeds_p)
+    return out[:B, :V]
+
+
+def tournament_keyed_kernel(probs, keys, ctx_hashes, *, stream: int,
+                            m: int = 30, block_rows: int = 4,
+                            interpret: bool = False):
+    """probs: (B, V) normalized; keys: (B,) uint32 key words; ctx_hashes:
+    (B,) uint32.  Per-row g-seeds are derived in-kernel from the key row
+    (the multi-tenant path — no host seed tensor), then the m tournament
+    rounds run VMEM-resident.  Returns (B, V) f32."""
+    B, V = probs.shape
+    vp = -(-V // 128) * 128
+    bp = -(-B // block_rows) * block_rows
+    probs_p = jnp.zeros((bp, vp), probs.dtype).at[:B, :V].set(probs)
+    keys_p = jnp.zeros((bp,), jnp.uint32).at[:B].set(
+        keys.astype(jnp.uint32))
+    ctx_p = jnp.zeros((bp,), jnp.uint32).at[:B].set(
+        ctx_hashes.astype(jnp.uint32))
+    out = pl.pallas_call(
+        functools.partial(_keyed_kernel, m=m, vocab=V, stream=int(stream)),
+        grid=(bp // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, vp), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, vp), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, vp), jnp.float32),
+        interpret=interpret,
+    )(probs_p, keys_p, ctx_p)
     return out[:B, :V]

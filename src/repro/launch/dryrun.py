@@ -77,8 +77,7 @@ def input_specs(arch: str, shape_name: str, *, k_lookahead: int = 4
     params = M.abstract_params(cfg, jnp.bfloat16)
     d_params = M.abstract_params(dcfg, jnp.bfloat16)
     state = E.abstract_state(cfg, dcfg, scfg, B, S)
-    return {"params": params, "d_params": d_params, "state": state,
-            "key": jax.ShapeDtypeStruct((), jax.random.key(0).dtype)}
+    return {"params": params, "d_params": d_params, "state": state}
 
 
 def opt_abstract(params_abstract):
@@ -240,7 +239,7 @@ def lower_case(arch: str, shape_name: str, mesh, *, k_lookahead: int = 4,
         d_shardings=jax.tree.map(lambda s: NS(mesh, s), dp_spec))
     with mesh:
         lowered = jitted.lower(specs["params"], specs["d_params"],
-                               specs["state"], specs["key"])
+                               specs["state"])
     return lowered
 
 

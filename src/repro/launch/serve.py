@@ -20,6 +20,16 @@ admitted FIFO into ``--batch`` live slots at sync points:
 
     PYTHONPATH=src python -m repro.launch.serve --requests reqs.jsonl \
         --batch 4 --sync-every 4 [--eos-id 10]
+
+Multi-tenant keys: a request line may carry ``"key": <int>`` (serve that
+request under an explicit watermark key word) and/or ``"tier":
+"latency"|"balanced"|"assurance"`` (map the tier to a watermark strength
+gamma on the trade-off curve).  ``--key-pool N`` serves keyless requests
+from a rotating N-word ``serve.keys.KeyPool`` instead of the single
+launch key.  The replay report prints each request's 8-hex key
+fingerprint — the only key identifier that ever leaves the process.
+Unknown request fields are a hard error (a typo must not silently serve
+under default keying).
 """
 from __future__ import annotations
 
@@ -68,6 +78,10 @@ def main():
     ap.add_argument("--num-pages", type=int, default=0,
                     help="block-paged KV cache: physical pages in the "
                          "shared pool (page 0 is the reserved null page)")
+    ap.add_argument("--key-pool", type=int, default=0,
+                    help="serve keyless requests from a rotating pool of "
+                         "N watermark key words derived from the launch "
+                         "key (0 = single shared key)")
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="paged admission prefills prompts in chunks of "
                          "this many tokens (one fixed compile, no decode "
@@ -130,40 +144,62 @@ def main():
         print(f"serving sharded on {mesh}")
 
     if args.requests:
+        allowed = {"tokens", "text", "n_tokens", "key", "tier", "uid"}
         reqs = []
         with open(args.requests) as fh:
-            for line in fh:
+            for ln, line in enumerate(fh, 1):
                 line = line.strip()
                 if not line:
                     continue
                 obj = json.loads(line)
+                unknown = sorted(set(obj) - allowed)
+                if unknown:
+                    ap.error(f"{args.requests}:{ln}: unknown request "
+                             f"fields {unknown} — accepted: "
+                             f"{sorted(allowed)}")
                 toks = (obj["tokens"] if "tokens" in obj else
                         synthetic.encode(obj["text"].encode()).tolist())
-                reqs.append({"prompt": np.asarray(toks, np.int32),
-                             "n_tokens": int(obj.get("n_tokens",
-                                                     args.tokens))})
+                req = {"prompt": np.asarray(toks, np.int32),
+                       "n_tokens": int(obj.get("n_tokens", args.tokens))}
+                for fld in ("key", "tier", "uid"):
+                    if fld in obj:
+                        req[fld] = obj[fld]
+                reqs.append(req)
         eos = None if args.eos_id < 0 else args.eos_id
         if args.page_size and not args.num_pages:
             ap.error("--page-size requires --num-pages")
+        from repro.serve import keys as KZ
+        pool = (KZ.KeyPool(key, n_keys=args.key_pool)
+                if args.key_pool else None)
+        ctrl = None
+        if any("tier" in r for r in reqs):
+            # modest MC budget: the CLI picks gammas, it doesn't publish
+            # the paper curve
+            ctrl = KZ.StrengthController(decoder_name=args.watermark,
+                                         n_seeds=4000, n_gamma=9)
         results = E.serve_requests(
             t_params, d_params, tcfg, dcfg, scfg, reqs, batch=args.batch,
             key=key, eos_id=eos, sync_every=args.sync_every, mesh=mesh,
             page_size=args.page_size or None,
             num_pages=args.num_pages or None,
-            prefill_chunk=args.prefill_chunk if args.page_size else None)
+            prefill_chunk=args.prefill_chunk if args.page_size else None,
+            key_pool=pool, strength_controller=ctrl)
         tot = sum(r.length for r in results)
         alive = sum(r.alive_steps for r in results)
         acc = sum(r.n_accepted for r in results)
         paged = (f" paged(page_size={args.page_size}, "
                  f"num_pages={args.num_pages})" if args.page_size else "")
+        pooled = f" key-pool={args.key_pool}" if args.key_pool else ""
         print(f"arch={args.arch} watermark={args.watermark} "
-              f"continuous batching{paged}: {len(results)} requests over "
-              f"{args.batch} slots")
+              f"continuous batching{paged}{pooled}: {len(results)} "
+              f"requests over {args.batch} slots")
         print(f"AATPS={acc / max(alive, 1):.3f} tokens={tot} "
               f"alive-slot-steps={alive}")
         for r in results[:8]:
             tail = " eos" if r.eos else ""
-            print(f"  req {r.uid}: {r.length} tokens{tail} | "
+            tier = f" tier={r.tier}" if r.tier else ""
+            print(f"  req {r.uid}: {r.length} tokens{tail} "
+                  f"key={r.key_fingerprint} gamma={r.strength:g}{tier} | "
                   + synthetic.decode_bytes(r.tokens)[:40].decode(
                       "latin1"))
         return

@@ -33,11 +33,19 @@ one jitted ``while_loop`` with a single host sync per generation (or per
 Divergent acceptance is handled with per-sequence cache positions (B,)
 throughout — no host-side re-batching.
 
+**Per-slot keys and strength**: the watermark key is engine *data*, not a
+global — the state carries a (B,) uint32 key-word row (``keys``) plus a
+(B,) strength row (``strength``, the gamma dial: the PRF-gated fraction of
+positions that sample from the watermark stream).  Every PRF derivation in
+the step chains off its row's key word, so mixed-key batches are
+first-class and each slot's stream is bit-identical to a solo run under
+its own key (multi-tenant serving — ``serve.keys.KeyPool``).
+
 **Sharded execution** (pass ``mesh=``): the engine state and every output
 buffer shard their batch dim over the mesh's dp axes (("pod","data"), via
 ``sharding.engine_state_specs``); model caches additionally shard kv-heads
-/ recurrent channels over "model"; the watermark key and scalar step state
-replicate.  ``jitted_spec_step`` / ``_jitted_gen_loop`` take the mesh plus
+/ recurrent channels over "model" — the per-slot key/strength rows shard
+with the batch; only scalar step state replicates.  ``jitted_spec_step`` / ``_jitted_gen_loop`` take the mesh plus
 explicit in/out shardings, and the fused ``spec_verify_wm`` tail runs its
 ``grid=(B,)`` on the per-shard *local* batch via ``shard_map`` (the tail is
 row-independent, so no collectives are added).  Sharded ``generate`` emits
@@ -168,11 +176,14 @@ def make_decoder(scfg: SpecConfig) -> Decoder:
 RECURRENT_KEYS = ("wkv", "att_shift", "ffn_shift", "conv", "ssm")
 
 
-def key_fingerprint(key) -> bytes:
-    """Stable byte fingerprint of a PRF key — tags served detection-stat
-    buffers so the pipeline never consumes them under a different key
-    (e.g. wrong-key false-positive calibration)."""
-    return np.asarray(jax.random.key_data(key)).tobytes()
+def key_fingerprint(key) -> str:
+    """8-hex-digit fingerprint of a watermark key (any accepted form: a
+    python int, a uint32 key word, or a legacy ``jax.random`` key) — tags
+    served detection-stat buffers and request results so consumers can
+    attribute records to a key without ever seeing key material they
+    don't hold."""
+    w = np.asarray(jax.device_get(prf.as_key_word(key)))
+    return format(int(w), "08x")
 
 
 def _token_stat_batch(dec: Decoder, seeds, tokens, vocab: int):
@@ -192,34 +203,64 @@ def _is_recurrent(cfg: ModelConfig) -> bool:
     return cfg.arch_type in ("ssm", "hybrid")
 
 
+def strength_gate(keys, ctx_h, strength):
+    """The per-position γ gate: a position is watermarked iff its
+    STREAM_GAMMA coin falls below the slot's ``strength`` scalar.  True
+    means *unwatermarked* (fold into the ``seen``/plain-stream path).
+    ``kernel_uniform`` is strictly < 1, so strength = 1.0 gates nothing —
+    provably bit-identical to the ungated engine — and strength = 0.0
+    gates every position (fully unwatermarked).  Elementwise: ``keys``
+    broadcasts as ``(B,)`` or ``(B, 1)`` against any ctx shape."""
+    gate_u = prf.uniform_from(keys, ctx_h, prf.STREAM_GAMMA)
+    return gate_u >= jnp.asarray(strength, jnp.float32)
+
+
+def _strength_vec(strength, B: int) -> jnp.ndarray:
+    """Normalize the per-slot strength argument (None = fully watermarked,
+    scalar, or (B,)) to the (B,) f32 engine-state row."""
+    if strength is None:
+        return jnp.ones((B,), jnp.float32)
+    s = jnp.asarray(strength, jnp.float32)
+    return jnp.broadcast_to(s, (B,)) if s.ndim == 0 else s
+
+
 def first_token_meta(dec: Decoder, scfg: SpecConfig, key, last_logits,
-                     window, vocab: int) -> Dict[str, Any]:
+                     window, vocab: int, strength=None) -> Dict[str, Any]:
     """Sample the first (prefill) token from ``last_logits`` (B, V) under
     the context ``window`` (B, c) and derive its slot-0 metadata — the
     shared tail of ``init_state`` and the scheduler's chunked-prefill
     finalize, so the two admission paths are bit-identical by
-    construction."""
+    construction.  ``key`` may be per-slot ((B,) key words) or a single
+    key shared by the batch; ``strength`` (None/scalar/(B,)) applies the
+    γ gate to the first position — a gated first token samples from the
+    plain stream and is flagged in ``last_msk``."""
+    B = window.shape[0]
+    keys = prf.as_key_words(key, B)
+    sv = _strength_vec(strength, B)
     ctx0 = prf.context_hash(window)
+    gate = strength_gate(keys, ctx0, sv)
     p0 = jax.nn.softmax(
         last_logits.astype(jnp.float32) / scfg.temperature, -1)
-    first, _ = jax.vmap(
-        lambda pr, ch: dec.sample(pr, key, ch, prf.STREAM_TARGET))(p0, ctx0)
-    first = first.astype(jnp.int32)
+    first_wm, _ = jax.vmap(
+        lambda pr, kw, ch: dec.sample(pr, kw, ch, prf.STREAM_TARGET))(
+        p0, keys, ctx0)
+    first_pl = jax.vmap(
+        lambda pr, kw, ch: race_argmax(
+            pr, prf.wm_seed(kw, ch, prf.STREAM_PLAIN + 3)))(p0, keys, ctx0)
+    first = jnp.where(gate, first_pl, first_wm).astype(jnp.int32)
     window = jnp.concatenate([window[:, 1:], first[:, None]], axis=1)
-    yd_seed = jax.vmap(
-        lambda ch: prf.wm_seed(key, ch, prf.STREAM_DRAFT))(ctx0)
-    yt_seed = jax.vmap(
-        lambda ch: prf.wm_seed(key, ch, prf.STREAM_TARGET))(ctx0)
+    yd_seed = prf.wm_seed(keys, ctx0, prf.STREAM_DRAFT)
+    yt_seed = prf.wm_seed(keys, ctx0, prf.STREAM_TARGET)
     return {
         "window": window,          # (B, c) — ends at the pending last token
         "last": first,             # (B,) committed but not yet consumed
         # slot-0 metadata of ``last`` (resume path: never recomputed from
         # the prompt tail) — the context it was sampled under, its recorded
-        # acceptance coin, its repeated-context flag, and its detection
+        # acceptance coin, its plain-stream flag, and its detection
         # statistics under the draft/target streams.
         "last_ctx": ctx0,
-        "last_u": jax.vmap(lambda ch: prf.accept_uniform(key, ch))(ctx0),
-        "last_msk": jnp.zeros(first.shape, bool),
+        "last_u": prf.accept_uniform(keys, ctx0),
+        "last_msk": gate,
         "last_yd": _token_stat_batch(dec, yd_seed, first, vocab),
         "last_yt": _token_stat_batch(dec, yt_seed, first, vocab),
     }
@@ -236,24 +277,34 @@ def prompt_window(prompts, c: int):
 
 def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                scfg: SpecConfig, prompts: jnp.ndarray, max_seq: int, key,
-               cache_dtype=None, extras: Optional[Dict[str, Any]] = None
-               ) -> Dict[str, Any]:
+               cache_dtype=None, extras: Optional[Dict[str, Any]] = None,
+               strength=None) -> Dict[str, Any]:
     """Prefill both models on ``prompts`` (B, S0) and sample the first token
     from the watermarked target prefill logits.  ``extras`` carries modality
     inputs for the stub frontends ("audio_emb" / "image_emb") — target only;
-    the draft is always a text-only LM."""
+    the draft is always a text-only LM.
+
+    ``key`` may be a single key (shared by the batch) or per-slot (B,) key
+    words; ``strength`` (None/scalar/(B,)) is the per-slot γ operating
+    point.  Both become first-class rows of the jitted engine state
+    (``keys``/``strength``) — no code path closes over a global key."""
     B, S0 = prompts.shape
     dec = make_decoder(scfg)
+    keys = prf.as_key_words(key, B)
+    sv = _strength_vec(strength, B)
     t_batch = {"tokens": prompts, **(extras or {})}
     t_logits, t_cache = M.prefill(t_params, tcfg, t_batch,
                                   max_seq, cache_dtype=cache_dtype)
     _, d_cache = M.prefill(d_params, dcfg, {"tokens": prompts}, max_seq,
                            cache_dtype=cache_dtype)
     window = prompt_window(prompts, scfg.ctx_window)
-    meta = first_token_meta(dec, scfg, key, t_logits[:, -1], window,
-                            tcfg.vocab)
+    meta = first_token_meta(dec, scfg, keys, t_logits[:, -1], window,
+                            tcfg.vocab, strength=sv)
+    # gated (plain-sampled) first tokens leave no history entry — their
+    # context never consumed watermark randomness
+    gated0 = meta["last_msk"]
     hist = jnp.zeros((B, scfg.history_cap), jnp.uint32)
-    hist = hist.at[:, 0].set(meta["last_ctx"])
+    hist = hist.at[:, 0].set(jnp.where(gated0, 0, meta["last_ctx"]))
     # per-sequence positions from the start (divergent acceptance later)
     t_cache = dict(t_cache, pos=jnp.full((B,), S0, jnp.int32))
     d_cache = dict(d_cache, pos=jnp.full((B,), S0, jnp.int32))
@@ -261,9 +312,11 @@ def init_state(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         "t_cache": t_cache,
         "d_cache": d_cache,
         **meta,
+        "keys": keys,              # (B,) per-slot watermark key words
+        "strength": sv,            # (B,) per-slot γ operating points
         "n_committed": jnp.full((B,), S0 + 1, jnp.int32),
         "hist": hist,              # (B, H) used context hashes
-        "hist_n": jnp.ones((B,), jnp.int32),
+        "hist_n": (~gated0).astype(jnp.int32),
         "step_idx": jnp.zeros((), jnp.int32),
     }
 
@@ -297,6 +350,8 @@ def init_empty_paged_state(tcfg: ModelConfig, dcfg: ModelConfig,
         "last_msk": jnp.zeros((B,), bool),
         "last_yd": jnp.zeros((B, S), jnp.float32),
         "last_yt": jnp.zeros((B, S), jnp.float32),
+        "keys": jnp.zeros((B,), jnp.uint32),
+        "strength": jnp.ones((B,), jnp.float32),
         "n_committed": jnp.zeros((B,), jnp.int32),
         "hist": jnp.zeros((B, scfg.history_cap), jnp.uint32),
         "hist_n": jnp.zeros((B,), jnp.int32),
@@ -325,6 +380,8 @@ def abstract_state(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         "last_msk": sds((batch,), jnp.bool_),
         "last_yd": sds((batch, S), jnp.float32),
         "last_yt": sds((batch, S), jnp.float32),
+        "keys": sds((batch,), jnp.uint32),
+        "strength": sds((batch,), jnp.float32),
         "n_committed": sds((batch,), jnp.int32),
         "hist": sds((batch, scfg.history_cap), jnp.uint32),
         "hist_n": sds((batch,), jnp.int32),
@@ -371,16 +428,19 @@ def _seen_in_history(hist, hist_n, ctx_h):
     return ((hist == ctx_h[:, None]) & valid).any(axis=-1)
 
 
-def _wm_sample_batch(dec, probs, key, ctx_h, stream, seen, fallback_stream):
-    """Watermarked sample per sequence; repeated contexts fall back to raw
-    categorical sampling (counter-PRF race) with a non-watermark stream."""
+def _wm_sample_batch(dec, probs, keys, ctx_h, stream, seen, fallback_stream):
+    """Watermarked sample per sequence under per-row key words (B,);
+    repeated contexts (and γ-gated positions — both fold into ``seen``)
+    fall back to raw categorical sampling (counter-PRF race) with a
+    non-watermark stream."""
     tok_wm, _ = jax.vmap(
-        lambda pr, ch: dec.sample(pr, key, ch, stream))(probs, ctx_h)
+        lambda pr, kw, ch: dec.sample(pr, kw, ch, stream))(probs, keys,
+                                                           ctx_h)
 
-    def raw(pr, ch):
-        return _race_sample(pr, prf.wm_seed(key, ch, fallback_stream))
+    def raw(pr, kw, ch):
+        return _race_sample(pr, prf.wm_seed(kw, ch, fallback_stream))
 
-    tok_raw = jax.vmap(raw)(probs, ctx_h)
+    tok_raw = jax.vmap(raw)(probs, keys, ctx_h)
     return jnp.where(seen, tok_raw, tok_wm).astype(jnp.int32)
 
 
@@ -427,13 +487,15 @@ def _rollback(cache, checkpoints, pos0, out_len):
 
 def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                    mesh=None) -> Callable:
-    """Build the jittable spec_step(t_params, d_params, state, key,
-    live=None, eos_id=None) -> (state, StepOutput).  ``key`` is the
-    watermark key (static stream derivation) — in ``standard`` accept mode
-    it also feeds fresh coins.  ``eos_id`` (optional traced scalar; -1
-    disables) truncates the emission — and every piece of committed state —
-    at the first EOS token, so a stopped slot's state ends exactly at its
-    delivered stream.
+    """Build the jittable spec_step(t_params, d_params, state,
+    live=None, eos_id=None) -> (state, StepOutput).  The watermark keys
+    and γ strengths are per-slot rows of the state (``state["keys"]`` /
+    ``state["strength"]``) — nothing closes over a global key, so
+    mixed-key batches are first-class; in ``standard`` accept mode the
+    per-row key word also feeds fresh coins.  ``eos_id`` (optional traced
+    scalar; -1 disables) truncates the emission — and every piece of
+    committed state — at the first EOS token, so a stopped slot's state
+    ends exactly at its delivered stream.
 
     ``live`` (optional, (B,) bool) is the continuous-batching slot mask:
     slots with live == False (drained / free serving slots) are *frozen* —
@@ -457,28 +519,33 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
     tail_wm_stream = dec.target_stream
     draft_wm_stream = dec.draft_stream
     tail_spec = dec.fused_tail
+    # static PRF-stream tuple for the fused tail: the kernel re-derives
+    # per-slot seeds from the key row in VMEM under these streams
+    tail_streams = (tail_wm_stream, prf.STREAM_PLAIN + 2,
+                    prf.STREAM_PLAIN + 3,
+                    prf.STREAM_PLAIN + tail_wm_stream)
 
-    def _draft_sample_fused(q_full, ctx_h, seen, key):
+    def _draft_sample_fused(q_full, ctx_h, seen, keys):
         """Scheme-fused draft sampling: the engine derives the per-context
-        seed vectors (watermark / finite-m draw / seen-fallback) and the
-        scheme's ``draft_sampler`` turns them into tokens — a seed-select
-        Gumbel race for race schemes, tournament + race for SynthID —
+        seed vectors (watermark / finite-m draw / seen-fallback) from the
+        per-row key words — elementwise, no vmap — and the scheme's
+        ``draft_sampler`` turns them into tokens — a seed-select Gumbel
+        race for race schemes, tournament + race for SynthID —
         bit-identical to the two-branch decoder path."""
-        wm = jax.vmap(lambda ch: prf.wm_seed(key, ch, draft_wm_stream))(
-            ctx_h)
-        pl = jax.vmap(lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 1))(
-            ctx_h)
+        wm = prf.wm_seed(keys, ctx_h, draft_wm_stream)
+        pl = prf.wm_seed(keys, ctx_h, prf.STREAM_PLAIN + 1)
         if tail_spec is not None and tail_spec.needs_draw_seeds:
-            dw = jax.vmap(lambda ch: prf.wm_seed(
-                key, ch, prf.STREAM_PLAIN + draft_wm_stream))(ctx_h)
+            dw = prf.wm_seed(keys, ctx_h,
+                             prf.STREAM_PLAIN + draft_wm_stream)
         else:
             dw = wm
         return dec.draft_sampler(q_full, wm, dw, pl, seen)
 
-    def step(t_params, d_params, state, key, live=None, eos_id=None):
+    def step(t_params, d_params, state, live=None, eos_id=None):
         t_cache, d_cache = state["t_cache"], state["d_cache"]
         window, last = state["window"], state["last"]
         hist, hist_n = state["hist"], state["hist_n"]
+        keys, strength = state["keys"], state["strength"]
         B = last.shape[0]
         t_pos0 = t_cache["pos"]
         d_pos0 = d_cache["pos"]
@@ -493,10 +560,14 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
             ctx_h = prf.context_hash(window)
             seen = (_seen_in_history(hist, hist_n, ctx_h)
                     if scfg.mask_repeated else jnp.zeros((B,), bool))
+            # γ-gated positions fold into ``seen`` before any use: they
+            # sample from the plain stream, are flagged ``masked`` and
+            # leave no history entry — the strength dial is one mask.
+            seen = seen | strength_gate(keys, ctx_h, strength)
             if fused and dec.draft_sampler is not None:
-                tok = _draft_sample_fused(q_full, ctx_h, seen, key)
+                tok = _draft_sample_fused(q_full, ctx_h, seen, keys)
             else:
-                tok = _wm_sample_batch(dec, q_full, key, ctx_h,
+                tok = _wm_sample_batch(dec, q_full, keys, ctx_h,
                                        prf.STREAM_DRAFT, seen,
                                        prf.STREAM_PLAIN + 1)
             window = jnp.concatenate([window[:, 1:], tok[:, None]], axis=1)
@@ -515,6 +586,7 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         ctx_bonus = prf.context_hash(window_k)          # (B,)
         seen_bonus = (_seen_in_history(hist, hist_n, ctx_bonus)
                       if scfg.mask_repeated else jnp.zeros((B,), bool))
+        seen_bonus = seen_bonus | strength_gate(keys, ctx_bonus, strength)
 
         # ---- 2. target verification ----------------------------------------
         fed = jnp.concatenate([last[:, None], draft_toks], axis=1)  # (B,K+1)
@@ -523,44 +595,31 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
 
         # ---- 3. acceptance coins -------------------------------------------
         if scfg.accept == "pseudorandom":
-            u = jax.vmap(jax.vmap(lambda ch: prf.accept_uniform(key, ch)))(
-                ctx_hs)                                   # (B, K)
+            u = prf.accept_uniform(keys[:, None], ctx_hs)   # (B, K)
         else:
-            u = jax.random.uniform(
-                jax.random.fold_in(key, state["step_idx"]), (B, K))
+            # fresh coins, still per-slot: each row folds its own key word
+            # so mixed-key batches stay slot-isolated even in standard mode
+            u = jax.vmap(lambda kw: jax.random.uniform(
+                jax.random.fold_in(jax.random.key(kw), state["step_idx"]),
+                (K,)))(keys)
 
         all_hashes = jnp.concatenate([ctx_hs, ctx_bonus[:, None]], axis=1)
         all_seen = jnp.concatenate([seens, seen_bonus[:, None]], axis=1)
 
         if fused:
             # ---- 4. fused verify + residual/bonus (Pallas) -----------------
-            # Per-slot scalar seeds for the ζ^T and non-watermark streams
-            # (plus the finite-m draw coins when the scheme's tail needs
-            # them); the kernel gathers p/q of the drafts, computes the
-            # prefix acceptance and samples the single emitted extra token
-            # in VMEM — one Gumbel race or one m-round tournament per row,
-            # per the scheme's FusedTail declaration — switching to the
-            # plain-stream seed on ``seen`` contexts.
-            wm_seeds = jax.vmap(jax.vmap(
-                lambda ch: prf.wm_seed(key, ch, tail_wm_stream)))(all_hashes)
-            pl_r = jax.vmap(jax.vmap(
-                lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 2)))(
-                ctx_hs)
-            pl_b = jax.vmap(
-                lambda ch: prf.wm_seed(key, ch, prf.STREAM_PLAIN + 3))(
-                ctx_bonus)
-            plain_seeds = jnp.concatenate([pl_r, pl_b[:, None]], axis=1)
-            draw_seeds = None
-            if tail_spec.needs_draw_seeds:
-                draw_seeds = jax.vmap(jax.vmap(
-                    lambda ch: prf.wm_seed(
-                        key, ch, prf.STREAM_PLAIN + tail_wm_stream)))(
-                    all_hashes)
+            # The kernel gathers p/q of the drafts, computes the prefix
+            # acceptance and samples the single emitted extra token in
+            # VMEM — one Gumbel race or one m-round tournament per row,
+            # per the scheme's FusedTail declaration — re-deriving every
+            # per-slot seed from the (B,) key row under the static
+            # ``tail_streams`` and switching to the plain-stream seed on
+            # ``seen`` contexts.  No host-derived seed tensors cross HBM.
             axes = SHR.dp_axes(mesh, B) if mesh is not None else None
             live_i = None if live is None else live.astype(jnp.int32)
             n_acc, prefix_i, extra, _ = KOPS.spec_verify_wm(
-                p_fulls, q_fulls, draft_toks, u, wm_seeds, plain_seeds,
-                all_seen, live_i, draw_seeds, tail=tail_spec,
+                p_fulls, q_fulls, draft_toks, u, keys, all_hashes,
+                all_seen, live_i, streams=tail_streams, tail=tail_spec,
                 mesh=mesh if axes else None, batch_axes=axes)
             prefix = prefix_i.astype(bool)
         else:
@@ -580,10 +639,10 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
             resid = jnp.maximum(p_fulls[:, :K] - q_fulls, 0.0)  # (B, K, V)
             resid_toks = jax.vmap(
                 lambda pr, ch, sn: _wm_sample_batch(
-                    dec, pr, key, ch, prf.STREAM_TARGET, sn,
+                    dec, pr, keys, ch, prf.STREAM_TARGET, sn,
                     prf.STREAM_PLAIN + 2),
                 in_axes=(1, 1, 1), out_axes=1)(resid, ctx_hs, seens)
-            bonus_tok = _wm_sample_batch(dec, p_fulls[:, K], key, ctx_bonus,
+            bonus_tok = _wm_sample_batch(dec, p_fulls[:, K], keys, ctx_bonus,
                                          prf.STREAM_TARGET, seen_bonus,
                                          prf.STREAM_PLAIN + 3)    # (B,)
             extra = jnp.where(
@@ -621,10 +680,8 @@ def make_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         # pass.  Streams here are the detection-time constants, matching
         # ``Decoder.recover_stats`` bit-exactly.
         V = q_fulls.shape[-1]
-        yd_seeds = jax.vmap(jax.vmap(
-            lambda ch: prf.wm_seed(key, ch, prf.STREAM_DRAFT)))(all_hashes)
-        yt_seeds = jax.vmap(jax.vmap(
-            lambda ch: prf.wm_seed(key, ch, prf.STREAM_TARGET)))(all_hashes)
+        yd_seeds = prf.wm_seed(keys[:, None], all_hashes, prf.STREAM_DRAFT)
+        yt_seeds = prf.wm_seed(keys[:, None], all_hashes, prf.STREAM_TARGET)
         y_d = _token_stat_batch(dec, yd_seeds, out, V)    # (B, K+1, S)
         y_t = _token_stat_batch(dec, yt_seeds, out, V)
 
@@ -788,9 +845,10 @@ def jitted_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
 
     With ``mesh`` + ``state_abs`` (a ShapeDtypeStruct skeleton of the
     engine state) the step is jitted with explicit in/out shardings: state
-    and StepOutput batch-sharded over the dp axes, the key replicated, and
-    params on ``t_shardings``/``d_shardings`` (None = follow the arguments,
-    e.g. pre-placed replicated params)."""
+    and StepOutput batch-sharded over the dp axes (the per-slot key and
+    strength rows ride inside the state and shard with it), and params on
+    ``t_shardings``/``d_shardings`` (None = follow the arguments, e.g.
+    pre-placed replicated params)."""
     if mesh is None:
         return _jitted_spec_step_plain(tcfg, dcfg, scfg)
     assert state_abs is not None, "sharded jit needs the abstract state"
@@ -805,8 +863,7 @@ def jitted_spec_step(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         out_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), out_specs)
         fn = jax.jit(
             make_spec_step(tcfg, dcfg, scfg, mesh=mesh),
-            in_shardings=(t_shardings, d_shardings, st_sh,
-                          NamedSharding(mesh, P())),
+            in_shardings=(t_shardings, d_shardings, st_sh),
             out_shardings=(st_sh, out_sh))
         _sharded_cache_put(memo, fn)
     return fn
@@ -833,8 +890,11 @@ class GenerationResult:
     y_target: Optional[np.ndarray] = None    # (B, N, stat_dim), zeta^T
     stat_scheme: Optional[str] = None        # decoder name the stats were
     #                                          recorded under (safety tag)
-    stat_key: Optional[bytes] = None         # fingerprint of the PRF key
-    #                                          the stats were recorded under
+    keys: Optional[np.ndarray] = None        # (B,) uint32 per-slot key
+    #                                          words the stats/tokens were
+    #                                          generated under
+    strength: Optional[np.ndarray] = None    # (B,) f32 per-slot watermark
+    #                                          strength (gamma dial)
 
 
 def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
@@ -861,7 +921,7 @@ def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
     step = make_spec_step(tcfg, dcfg, scfg, mesh=mesh)
     K1 = scfg.K + 1
 
-    def loop(t_params, d_params, carry, key, n_tokens, eos_id, step_limit):
+    def loop(t_params, d_params, carry, n_tokens, eos_id, step_limit):
         cap = carry["toks"].shape[1] - 1   # last column is trash
 
         def cond(c):
@@ -872,7 +932,7 @@ def _make_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
             # the step truncates its own emission (and all committed
             # state) at the first EOS, so the commit below just follows
             # out_len; the EOS token itself is the last emitted slot
-            state, outp = step(t_params, d_params, c["state"], key,
+            state, outp = step(t_params, d_params, c["state"],
                                live=live, eos_id=eos_id)
             B = c["lens"].shape[0]
             idx = jnp.arange(K1)[None, :]
@@ -940,8 +1000,9 @@ def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
                      mesh=None, *, carry_abs=None, t_shardings=None,
                      d_shardings=None) -> Callable:
     """The jitted generation loop.  With ``mesh`` + ``carry_abs`` it is
-    compiled with explicit in/out shardings (carry batch-sharded over dp,
-    key and scalar limits replicated, params on the given shardings)."""
+    compiled with explicit in/out shardings (carry batch-sharded over dp —
+    the per-slot keys/strength ride inside the state — scalar limits
+    replicated, params on the given shardings)."""
     if mesh is None:
         return _jitted_gen_loop_plain(tcfg, dcfg, scfg)
     assert carry_abs is not None, "sharded jit needs the abstract carry"
@@ -954,7 +1015,7 @@ def _jitted_gen_loop(tcfg: ModelConfig, dcfg: ModelConfig, scfg: SpecConfig,
         fn = jax.jit(
             _make_gen_loop(tcfg, dcfg, scfg, mesh=mesh),
             in_shardings=(t_shardings, d_shardings, c_sh,
-                          rep, rep, rep, rep),
+                          rep, rep, rep),
             out_shardings=c_sh)
         _sharded_cache_put(memo, fn)
     return fn
@@ -1013,6 +1074,7 @@ def init_gen_carry(state: Dict[str, Any], n_vec: np.ndarray, cap: int,
 
 def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
              scfg: SpecConfig, prompts, *, n_tokens, key,
+             strength=None,
              max_seq: Optional[int] = None,
              extras: Optional[Dict[str, Any]] = None,
              sync_every: Optional[int] = None,
@@ -1038,6 +1100,14 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     from the state's ``last_ctx``/``last_u``/``last_msk``/``last_yd``/
     ``last_yt``, never from the prompt tail).
 
+    ``key`` may be a python int, a typed jax PRNG key, or a (B,) vector of
+    per-slot key words — a *mixed-key batch* is just a (B,) key argument.
+    ``strength`` (None / scalar / (B,)) is the per-slot gamma dial: the
+    fraction of positions sampled from the watermark stream (1.0 = fully
+    watermarked, 0.0 = plain sampling; see ``core.tradeoff``).  Both are
+    burned into the engine state at init, so resumed states keep their
+    keys.
+
     Pass ``mesh`` to run the loop sharded: engine state and output buffers
     batch-shard over the dp axes, params shard by the production rules
     (``shard_params=False`` replicates them — e.g. tiny-model parity runs
@@ -1053,7 +1123,7 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     max_seq = max_seq or (S0 + 1 + (scfg.K + 1) * max_steps + 2)
     if state is None:
         state = init_state(t_params, d_params, tcfg, dcfg, scfg, prompts,
-                           max_seq, key, extras=extras)
+                           max_seq, key, extras=extras, strength=strength)
 
     K1 = scfg.K + 1
     cap = n_max + K1 + 1
@@ -1073,19 +1143,18 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         carry = jax.device_put(carry, carry_shardings(_abs_tree(carry),
                                                       mesh))
         rep = NamedSharding(mesh, P())
-        key = jax.device_put(key, rep)
         n_tok = jax.device_put(n_tok, rep)
         eos = jax.device_put(eos, rep)
     else:
         loop = _jitted_gen_loop(tcfg, dcfg, scfg)
     if sync_every is None:
-        carry = loop(t_params, d_params, carry, key, n_tok, eos,
+        carry = loop(t_params, d_params, carry, n_tok, eos,
                      jnp.int32(max_steps))
     else:
         done = 0
         while done < max_steps:
             done = min(done + sync_every, max_steps)
-            carry = loop(t_params, d_params, carry, key, n_tok, eos,
+            carry = loop(t_params, d_params, carry, n_tok, eos,
                          jnp.int32(done))
             if bool(np.asarray(carry["done"]).all()):
                 break
@@ -1104,7 +1173,9 @@ def generate(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
         state=carry["state"], eos=np.asarray(carry["eos"]),
         y_draft=np.asarray(carry["yd"])[:, :cap],
         y_target=np.asarray(carry["yt"])[:, :cap],
-        stat_scheme=make_decoder(scfg).name, stat_key=key_fingerprint(key))
+        stat_scheme=make_decoder(scfg).name,
+        keys=np.asarray(carry["state"]["keys"]),
+        strength=np.asarray(carry["state"]["strength"]))
 
 
 def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
@@ -1115,7 +1186,8 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                    mesh=None, shard_params: bool = True,
                    page_size: Optional[int] = None,
                    num_pages: Optional[int] = None,
-                   prefill_chunk: Optional[int] = None):
+                   prefill_chunk: Optional[int] = None,
+                   key_pool=None, strength_controller=None):
     """Continuous batching: serve a whole request list through ``batch``
     live slots, admitting queued prompts into freed slots at sync points
     of the device-resident loop (see ``serve.scheduler``).
@@ -1130,6 +1202,15 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     ``page_size`` switches the KV caches to the block-paged pool
     (``num_pages`` pages shared by all slots, prompts admitted in
     ``prefill_chunk``-token chunks between decode sync points).
+
+    ``key_pool`` (a ``serve.keys.KeyPool``) turns on multi-tenant keying:
+    each request is served under its own per-slot key word (explicit
+    ``Request.key`` or pool-assigned with refcounted rotation), and
+    ``strength_controller`` (``serve.keys.StrengthController``) maps each
+    request's ``tier`` to a watermark-strength gamma on the paper's
+    strength/efficiency Pareto curve (``core.tradeoff``).  Without a pool
+    every request serves under ``key`` at full strength — bit-identical to
+    the single-tenant engine.
     """
     from repro.serve.scheduler import Scheduler, as_request
 
@@ -1143,6 +1224,8 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                       max_prompt_len=max_prompt_len, eos_id=eos_id,
                       sync_every=sync_every, mesh=mesh,
                       shard_params=shard_params, page_size=page_size,
-                      num_pages=num_pages, prefill_chunk=prefill_chunk)
+                      num_pages=num_pages, prefill_chunk=prefill_chunk,
+                      key_pool=key_pool,
+                      strength_controller=strength_controller)
     sched.submit_many(reqs)
     return sched.run()

@@ -1,0 +1,225 @@
+"""Multi-tenant watermark key management for the serving layer.
+
+Two host-side pieces sit between the request queue and the engine's
+per-slot ``(B,)`` key/strength rows (``serve.engine``):
+
+- ``KeyPool``: a refcounted pool of uint32 watermark *key words*.  Active
+  words are derived from a master key via the counter-PRF chain (never
+  stored key material), tagged by **epoch** so ``rotate()`` retires the
+  current generation for *new* requests while in-flight requests keep
+  their acquired word until released (refcounts drain naturally).  Every
+  word has an 8-hex **fingerprint** — the only identifier that leaves the
+  serving process (request logs, replay records, detection attribution).
+
+- ``StrengthController``: maps a request's latency/assurance class (its
+  ``tier``) to a watermark-strength gamma — a point on the paper's
+  strength/efficiency trade-off curve (``core.tradeoff``, Sec. 3.2).  A
+  tier is an *efficiency floor*: the controller picks the largest gamma
+  whose Monte-Carlo curve efficiency still meets the floor, so "latency"
+  buys speculative efficiency with watermark strength and "assurance"
+  takes the full-strength endpoint.  The gamma lands in the engine's
+  per-slot ``strength`` row, where it PRF-gates the fraction of positions
+  sampled from the watermark stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.core import prf
+
+# chain stream tag for pool-derived words (disjoint from the sampling
+# streams in core.prf — pool derivation never collides with ζ streams)
+STREAM_KEYPOOL = 0x4B
+
+
+def _word_of(key) -> int:
+    """Host-side uint32 key word of any accepted key form."""
+    return int(np.asarray(jax.device_get(prf.as_key_word(key))))
+
+
+def fingerprint_of(word: int) -> str:
+    """8-hex fingerprint of a key word (same format as
+    ``engine.key_fingerprint``)."""
+    return format(int(np.uint32(word)), "08x")
+
+
+def derive_key_word(master, epoch: int, index: int) -> int:
+    """The pool's word derivation: chain the master word with the pool
+    stream, the epoch and the index through the counter PRF.  Pure
+    function — reproducible attribution without storing key material."""
+    w = prf._chain(prf.as_key_word(master), np.uint32(STREAM_KEYPOOL))
+    w = prf._chain(w, np.uint32(epoch))
+    w = prf._chain(w, np.uint32(index))
+    return int(np.asarray(jax.device_get(w)))
+
+
+class KeyPool:
+    """Refcounted pool of watermark key words with epoch rotation.
+
+    ``acquire()`` hands out the least-loaded *active* word (deterministic
+    tie-break on index order); ``acquire(key)`` pins an explicit
+    per-request key instead (still refcounted, so release bookkeeping is
+    uniform).  ``rotate()`` advances the epoch: the next generation of
+    derived words becomes active for new acquisitions, while outstanding
+    words stay valid — and attributable — until their refcount drains.
+    ``lookup(fingerprint)`` maps a fingerprint back to every word this
+    pool has ever handed out (multi-key detection attribution).
+    """
+
+    def __init__(self, master, *, n_keys: int = 4, epoch: int = 0):
+        if n_keys < 1:
+            raise ValueError(f"n_keys must be >= 1, got {n_keys}")
+        self.n_keys = int(n_keys)
+        self.epoch = int(epoch)
+        self._master = master
+        self._refs: Dict[int, int] = {}          # word -> live refcount
+        self._seen: Dict[str, int] = {}          # fingerprint -> word
+        self._active: List[int] = []
+        self._derive_active()
+
+    def _derive_active(self) -> None:
+        self._active = [derive_key_word(self._master, self.epoch, i)
+                        for i in range(self.n_keys)]
+        for w in self._active:
+            self._seen.setdefault(fingerprint_of(w), w)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def acquire(self, key=None) -> int:
+        """Take a ref on a word: the least-loaded active word, or the
+        explicit per-request ``key`` (any accepted form) when given."""
+        if key is not None:
+            word = _word_of(key)
+        else:
+            word = min(self._active,
+                       key=lambda w: (self._refs.get(w, 0),
+                                      self._active.index(w)))
+        self._refs[word] = self._refs.get(word, 0) + 1
+        self._seen.setdefault(fingerprint_of(word), word)
+        return word
+
+    def release(self, word: int) -> None:
+        """Drop a ref; double-release raises (the refcount is the rotation
+        drain witness, so it must stay exact)."""
+        word = int(np.uint32(word))
+        n = self._refs.get(word, 0)
+        if n <= 0:
+            raise ValueError(f"release of unacquired key word "
+                             f"{fingerprint_of(word)}")
+        if n == 1:
+            del self._refs[word]
+        else:
+            self._refs[word] = n - 1
+
+    def rotate(self) -> int:
+        """Advance the epoch and re-derive the active set; returns the new
+        epoch.  In-flight words keep serving until released."""
+        self.epoch += 1
+        self._derive_active()
+        return self.epoch
+
+    # -- introspection / attribution ---------------------------------------
+
+    @property
+    def active_words(self) -> List[int]:
+        return list(self._active)
+
+    @property
+    def live_words(self) -> List[int]:
+        """Words with a nonzero refcount (current + pre-rotation)."""
+        return sorted(self._refs)
+
+    def refcount(self, word: int) -> int:
+        return self._refs.get(int(np.uint32(word)), 0)
+
+    def fingerprint(self, word: int) -> str:
+        return fingerprint_of(word)
+
+    def lookup(self, fp: str) -> Optional[int]:
+        """Word behind a fingerprint this pool has handed out (None when
+        the fingerprint was never seen)."""
+        return self._seen.get(fp)
+
+    def known_words(self) -> List[int]:
+        """Every word ever active or acquired here — the candidate set a
+        multi-key detection sweep scores against."""
+        return sorted(set(self._seen.values()))
+
+
+# ---------------------------------------------------------------------------
+# Strength controller: tier -> gamma via the trade-off curve
+# ---------------------------------------------------------------------------
+
+# tier -> speculative-efficiency floor on the trade-off curve's x-axis.
+# "latency" keeps the batch close to plain speculative sampling speed,
+# "assurance" takes maximal watermark strength regardless of efficiency.
+DEFAULT_TIERS: Dict[str, float] = {
+    "latency": 0.98,
+    "balanced": 0.92,
+    "assurance": 0.0,
+}
+
+
+@dataclasses.dataclass
+class StrengthController:
+    """Pick a per-request watermark strength gamma from its ``tier``.
+
+    The controller evaluates (lazily, once) the linear-class trade-off
+    curve of the serving scheme (``tradeoff.linear_class_curve`` — strength
+    vs. speculative efficiency over gamma) and for each tier returns the
+    **largest gamma whose efficiency meets the tier's floor** — i.e. the
+    strongest watermark the tier's latency budget admits.  Pass ``curve``
+    (a ``tradeoff.Curve`` or a zero-arg callable returning one) to inject
+    a precomputed/synthetic curve — unit tests and production both avoid
+    re-running the Monte-Carlo sweep per process that way.
+
+    ``watermark="none"`` always maps to gamma 0 (nothing to gate)."""
+
+    decoder_name: str = "gumbel"
+    tiers: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_TIERS))
+    curve: Optional[Callable] = None      # Curve or () -> Curve
+    n_seeds: int = 20_000                 # MC budget when self-computing
+    n_gamma: int = 17
+
+    def __post_init__(self):
+        self._curve = None
+        self._cache: Dict[str, float] = {}
+
+    def _get_curve(self):
+        if self._curve is None:
+            c = self.curve
+            if callable(c):
+                c = c()
+            if c is None:
+                from repro.core import tradeoff
+                c = tradeoff.linear_class_curve(
+                    self.decoder_name, n_seeds=self.n_seeds,
+                    n_gamma=self.n_gamma)
+            self._curve = c
+        return self._curve
+
+    def pick(self, tier: str) -> float:
+        """Gamma for ``tier``; unknown tiers raise (a typo must not
+        silently serve at the wrong strength)."""
+        if tier not in self.tiers:
+            raise ValueError(f"unknown strength tier {tier!r} — known: "
+                             f"{sorted(self.tiers)}")
+        if self.decoder_name == "none":
+            return 0.0
+        got = self._cache.get(tier)
+        if got is not None:
+            return got
+        floor = float(self.tiers[tier])
+        curve = self._get_curve()
+        eff = np.asarray(curve.efficiency, np.float64)
+        gammas = np.asarray(curve.gammas, np.float64)
+        ok = eff >= floor
+        gamma = float(gammas[ok].max()) if ok.any() else float(
+            gammas[int(np.argmax(eff))])
+        self._cache[tier] = gamma
+        return gamma

@@ -34,9 +34,21 @@ run of the same prompt/key, regardless of what is admitted or drained in
 the other slots (enforced by ``tests/test_scheduler.py`` on both the
 single-device and the forced-multi-device mesh paths).  It holds because
 every per-slot quantity (watermark streams, history, caches) is a function
-of the slot's own state and the shared watermark key only — which also
-means it requires ``accept="pseudorandom"`` (Alg. 1): ``standard`` accept
-coins draw from the *global* step index and would entangle slots.
+of the slot's own state — including its own row of the engine's per-slot
+``keys``/``strength`` tensors — which also means it requires
+``accept="pseudorandom"`` (Alg. 1): ``standard`` accept coins draw from
+the *global* step index and would entangle slots.
+
+**Multi-tenant keys** (pass ``key_pool=`` a ``serve.keys.KeyPool``): each
+request is admitted under its own watermark key word — an explicit
+``Request.key``, or the pool's least-loaded active word (refcounted;
+released at flush; ``rotate()`` epochs retire words for new admissions
+while in-flight ones drain).  A ``strength_controller``
+(``serve.keys.StrengthController``) maps ``Request.tier`` to a
+per-request gamma on the strength/efficiency trade-off curve.  Results
+carry the key's 8-hex fingerprint (never key material) for detection
+attribution.  Without a pool every request serves under the scheduler's
+``key`` at gamma 1.0 — bit-identical to the single-tenant scheduler.
 
 Typical use goes through ``engine.serve_requests()``::
 
@@ -64,6 +76,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import prf
 from repro.serve import engine as E
 
 # ---------------------------------------------------------------------------
@@ -81,23 +94,40 @@ PHASES = (FREE, PREFILLING, DECODING, DRAINED)
 @dataclasses.dataclass
 class Request:
     """One prompt to serve.  ``n_tokens`` counts post-prompt tokens
-    (including the prefill sample), exactly like ``generate()``."""
+    (including the prefill sample), exactly like ``generate()``.
+
+    ``key`` (optional) pins the watermark key word this request is served
+    under (any form ``prf.as_key_word`` accepts); ``tier`` (optional)
+    names a strength class for the scheduler's ``StrengthController``
+    ("latency"/"balanced"/"assurance" by default)."""
     prompt: np.ndarray
     n_tokens: int
     uid: int = -1
+    key: Optional[int] = None
+    tier: Optional[str] = None
+
+
+_REQUEST_FIELDS = ("prompt", "n_tokens", "uid", "key", "tier")
 
 
 def as_request(r) -> Request:
     """Normalize the accepted intake formats — a ``Request``, a
-    ``{"prompt": ..., "n_tokens": ..., ["uid"]}`` dict, or a ``(prompt,
-    n_tokens)`` pair — to a ``Request`` (the single parser shared by
-    ``Scheduler.submit_many`` and ``engine.serve_requests``)."""
+    ``{"prompt": ..., "n_tokens": ..., ["uid"/"key"/"tier"]}`` dict, or a
+    ``(prompt, n_tokens)`` pair — to a ``Request`` (the single parser
+    shared by ``Scheduler.submit_many`` and ``engine.serve_requests``).
+    Unknown dict fields raise: a silently dropped ``key`` would serve a
+    request under the wrong watermark key."""
     if isinstance(r, Request):
         return r
     if isinstance(r, dict):
+        unknown = sorted(set(r) - set(_REQUEST_FIELDS))
+        if unknown:
+            raise ValueError(f"unknown request fields {unknown} — "
+                             f"accepted: {list(_REQUEST_FIELDS)}")
         return Request(prompt=np.asarray(r["prompt"], np.int32),
                        n_tokens=int(r["n_tokens"]),
-                       uid=int(r.get("uid", -1)))
+                       uid=int(r.get("uid", -1)),
+                       key=r.get("key"), tier=r.get("tier"))
     return Request(prompt=np.asarray(r[0], np.int32), n_tokens=int(r[1]))
 
 
@@ -120,7 +150,18 @@ class RequestResult:
     #                                         detection statistics
     y_target: Optional[np.ndarray] = None   # (n, stat_dim), zeta^T
     stat_scheme: Optional[str] = None       # decoder the stats belong to
-    stat_key: Optional[bytes] = None        # PRF-key fingerprint
+    key_word: Optional[int] = None          # uint32 watermark key word the
+    #                                         request was served under
+    strength: float = 1.0                   # gamma the request ran at
+    tier: Optional[str] = None              # strength class, when given
+
+    @property
+    def key_fingerprint(self) -> Optional[str]:
+        """8-hex fingerprint of the serving key (what logs/replays carry —
+        never key material)."""
+        if self.key_word is None:
+            return None
+        return format(int(np.uint32(self.key_word)), "08x")
 
     @property
     def aatps(self) -> float:
@@ -133,7 +174,10 @@ class RequestResult:
     def as_generation_result(self) -> E.GenerationResult:
         """A batch-1 ``GenerationResult`` view, so the detection pipeline
         (``pipeline.records_from_generation``) consumes scheduler output
-        unchanged — including the served detection-stat buffers."""
+        unchanged — including the served detection-stat buffers and the
+        per-slot key/strength rows the served-stat gate checks."""
+        kw = None if self.key_word is None else \
+            np.array([self.key_word], np.uint32)
         return E.GenerationResult(
             tokens=self.tokens[None], lengths=np.array([self.length]),
             from_draft=self.src[None], u=self.u[None],
@@ -142,7 +186,8 @@ class RequestResult:
             n_steps=self.alive_steps, eos=np.array([self.eos]),
             y_draft=None if self.y_draft is None else self.y_draft[None],
             y_target=None if self.y_target is None else self.y_target[None],
-            stat_scheme=self.stat_scheme, stat_key=self.stat_key)
+            stat_scheme=self.stat_scheme, keys=kw,
+            strength=np.array([self.strength], np.float32))
 
 
 @dataclasses.dataclass
@@ -270,7 +315,8 @@ class Scheduler:
                  mesh=None, shard_params: bool = True,
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 key_pool=None, strength_controller=None):
         if scfg.accept != "pseudorandom":
             raise ValueError(
                 "continuous batching requires accept='pseudorandom': "
@@ -287,8 +333,19 @@ class Scheduler:
         if sync_every < 1:
             raise ValueError(f"sync_every must be >= 1, got {sync_every}")
         self.tcfg, self.dcfg, self.scfg = tcfg, dcfg, scfg
-        self.B, self.key = batch, key
+        self.B = batch
         self._stat_scheme = E.make_decoder(scfg).name
+        # default serving word: every request without a pool/explicit key
+        # serves under the scheduler key — bit-identical to single-tenant
+        self.key_word = int(np.asarray(jax.device_get(
+            prf.as_key_word(key))))
+        self.key_pool = key_pool
+        self.strength_controller = strength_controller
+        # per-slot serving metadata (host mirrors of the state rows)
+        self._slot_key: List[int] = [self.key_word] * batch
+        self._slot_strength: List[float] = [1.0] * batch
+        self._slot_tier: List[Optional[str]] = [None] * batch
+        self._slot_pooled: List[bool] = [False] * batch
         self.max_tokens = max_tokens
         self.max_prompt_len = max_prompt_len
         self.eos_id = eos_id
@@ -376,7 +433,6 @@ class Scheduler:
             self.carry = jax.device_put(
                 self.carry, E.carry_shardings(E._abs_tree(self.carry),
                                               mesh))
-            self.key = jax.device_put(key, NamedSharding(mesh, P()))
         else:
             self._loop = E._jitted_gen_loop(tcfg, dcfg, scfg)
             self.t_params, self.d_params = t_params, d_params
@@ -390,9 +446,11 @@ class Scheduler:
 
     # -- request intake ----------------------------------------------------
 
-    def submit(self, prompt, n_tokens: int, uid: Optional[int] = None
-               ) -> int:
-        """Queue one prompt; returns its uid (FIFO admission order)."""
+    def submit(self, prompt, n_tokens: int, uid: Optional[int] = None,
+               key=None, tier: Optional[str] = None) -> int:
+        """Queue one prompt; returns its uid (FIFO admission order).
+        ``key``/``tier`` carry the request's watermark key word and
+        strength class to admission (``_resolve_key``)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if not 1 <= len(prompt) <= self.max_prompt_len:
             raise ValueError(f"prompt length {len(prompt)} outside "
@@ -410,7 +468,7 @@ class Scheduler:
                              "— a duplicate would overwrite its result")
         self._next_uid = max(self._next_uid, uid) + 1
         self.queue.append(Request(prompt=prompt, n_tokens=int(n_tokens),
-                                  uid=uid))
+                                  uid=uid, key=key, tier=tier))
         self._total_target += int(n_tokens)
         if self.paged:
             self._total_chunks += -(-len(prompt) // self.prefill_chunk)
@@ -420,7 +478,8 @@ class Scheduler:
         """Queue requests in order (see ``as_request`` for the accepted
         formats)."""
         return [self.submit(r.prompt, r.n_tokens,
-                            uid=None if r.uid < 0 else r.uid)
+                            uid=None if r.uid < 0 else r.uid,
+                            key=r.key, tier=r.tier)
                 for r in map(as_request, requests)]
 
     # -- admission (sync point) --------------------------------------------
@@ -456,6 +515,34 @@ class Scheduler:
             alive_steps=carry["alive_steps"].at[b].set(0),
         )
 
+    def _resolve_key(self, req: Request, b: int) -> None:
+        """Assign the request's serving key word + strength gamma to slot
+        ``b``: an explicit ``Request.key``, the pool's least-loaded active
+        word, or the scheduler default; ``Request.tier`` goes through the
+        strength controller.  Pool words are refcounted until flush."""
+        pooled = False
+        if self.key_pool is not None:
+            word = self.key_pool.acquire(req.key)
+            pooled = True
+        elif req.key is not None:
+            word = int(np.asarray(jax.device_get(
+                prf.as_key_word(req.key))))
+        else:
+            word = self.key_word
+        if req.tier is not None:
+            if self.strength_controller is None:
+                raise ValueError(
+                    f"request uid={req.uid} names strength tier "
+                    f"{req.tier!r} but the scheduler was built without a "
+                    "strength_controller")
+            gamma = float(self.strength_controller.pick(req.tier))
+        else:
+            gamma = 1.0
+        self._slot_key[b] = word
+        self._slot_strength[b] = gamma
+        self._slot_tier[b] = req.tier
+        self._slot_pooled[b] = pooled
+
     def _admit(self) -> int:
         """Fill every FREE slot from the queue head (FIFO); returns the
         number of admissions."""
@@ -469,9 +556,11 @@ class Scheduler:
                 continue
             req = self.queue.popleft()
             slot.phase, slot.request = PREFILLING, req
+            self._resolve_key(req, b)
             sub = E.init_state(self.t_params, self.d_params, self.tcfg,
                                self.dcfg, self.scfg, req.prompt[None],
-                               self.max_seq, self.key)
+                               self.max_seq, self._slot_key[b],
+                               strength=self._slot_strength[b])
             self.carry = self._admit_jit(self.carry, sub, jnp.int32(b),
                                          jnp.int32(req.n_tokens))
             self.n_tok[b] = req.n_tokens
@@ -532,23 +621,31 @@ class Scheduler:
         state = dict(state, t_cache=t_cache, d_cache=d_cache)
         return dict(carry, state=state), t_logits
 
-    def _finalize_fn(self, carry, key, logits, b, last_idx, window_row,
-                     n_tok_b):
+    def _finalize_fn(self, carry, key_word, strength, logits, b, last_idx,
+                     window_row, n_tok_b):
         """Jitted: sample the prefill token of slot ``b`` from its last
         prompt-position logits and arm the slot — the paged counterpart of
         ``_admit_fn``, sharing ``engine.first_token_meta`` with
-        ``init_state`` so both admission paths are bit-identical."""
+        ``init_state`` so both admission paths are bit-identical.  The
+        slot's key word and strength gamma land in the state's per-slot
+        rows here (the paged analogue of ``init_state(key, strength)``)."""
         dec = E.make_decoder(self.scfg)
         state = carry["state"]
         last_logits = jax.lax.dynamic_index_in_dim(logits, last_idx,
                                                    axis=1, keepdims=False)
-        meta = E.first_token_meta(dec, self.scfg, key, last_logits,
-                                  window_row[None], self.tcfg.vocab)
+        meta = E.first_token_meta(dec, self.scfg, key_word, last_logits,
+                                  window_row[None], self.tcfg.vocab,
+                                  strength=strength)
         pos_b = jax.lax.dynamic_index_in_dim(state["t_cache"]["pos"], b,
                                              keepdims=False)
         hist_row = jnp.zeros((self.scfg.history_cap,), jnp.uint32)
+        gated0 = meta["last_msk"][0]
         state = dict(
             state,
+            keys=state["keys"].at[b].set(
+                jnp.asarray(key_word).astype(jnp.uint32)),
+            strength=state["strength"].at[b].set(
+                jnp.asarray(strength).astype(jnp.float32)),
             window=state["window"].at[b].set(meta["window"][0]),
             last=state["last"].at[b].set(meta["last"][0]),
             last_ctx=state["last_ctx"].at[b].set(meta["last_ctx"][0]),
@@ -557,9 +654,9 @@ class Scheduler:
             last_yd=state["last_yd"].at[b].set(meta["last_yd"][0]),
             last_yt=state["last_yt"].at[b].set(meta["last_yt"][0]),
             n_committed=state["n_committed"].at[b].set(pos_b + 1),
-            hist=state["hist"].at[b].set(
-                hist_row.at[0].set(meta["last_ctx"][0])),
-            hist_n=state["hist_n"].at[b].set(1),
+            hist=state["hist"].at[b].set(hist_row.at[0].set(
+                jnp.where(gated0, jnp.uint32(0), meta["last_ctx"][0]))),
+            hist_n=state["hist_n"].at[b].set((~gated0).astype(jnp.int32)),
         )
         eos0 = meta["last"][0] == self._eos
 
@@ -605,6 +702,7 @@ class Scheduler:
             self.carry = self._set_table_jit(self.carry, jnp.int32(b),
                                              self._table_row(b))
             slot.phase, slot.request = PREFILLING, req
+            self._resolve_key(req, b)
             self._chunk_cursor[b] = 0
             n += 1
         return n
@@ -636,7 +734,8 @@ class Scheduler:
             window = np.zeros((c,), np.int32)
             window[max(c - S0, 0):] = req.prompt[-c:]
             self.carry = self._finalize_jit(
-                self.carry, self.key, logits, jnp.int32(b),
+                self.carry, jnp.uint32(self._slot_key[b]),
+                jnp.float32(self._slot_strength[b]), logits, jnp.int32(b),
                 jnp.int32(S0 - 1 - start), jnp.asarray(window),
                 jnp.int32(req.n_tokens))
             self.n_tok[b] = req.n_tokens
@@ -688,7 +787,7 @@ class Scheduler:
             n_tok = jax.device_put(n_tok, rep)
             limit = jax.device_put(limit, rep)
         self.carry = self._loop(self.t_params, self.d_params, self.carry,
-                                self.key, n_tok, self._eos, limit)
+                                n_tok, self._eos, limit)
 
     # -- flush (sync point) ------------------------------------------------
 
@@ -726,7 +825,9 @@ class Scheduler:
                 y_draft=np.asarray(row["yd"]),
                 y_target=np.asarray(row["yt"]),
                 stat_scheme=self._stat_scheme,
-                stat_key=E.key_fingerprint(self.key))
+                key_word=self._slot_key[b],
+                strength=self._slot_strength[b],
+                tier=self._slot_tier[b])
             self._acc += res.n_accepted
             self._emitted += res.n_emitted
             self._alive += res.alive_steps
@@ -734,6 +835,12 @@ class Scheduler:
             out.append(res)
             slot.phase, slot.request = FREE, None
             self.n_tok[b] = 0
+            if self._slot_pooled[b]:
+                self.key_pool.release(self._slot_key[b])
+                self._slot_pooled[b] = False
+            self._slot_key[b] = self.key_word
+            self._slot_strength[b] = 1.0
+            self._slot_tier[b] = None
             if self.paged:
                 # return the pages AND null out the slot's device table:
                 # the freed slot keeps riding the loop done-masked, and

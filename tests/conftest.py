@@ -12,6 +12,19 @@ def pytest_configure(config):
         "(-m 'not slow'), run in the nightly full suite")
 
 
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compile_caches():
+    """Drop jit/compile caches between test modules.
+
+    The full suite compiles hundreds of XLA programs in one process;
+    letting them accumulate has produced hard segfaults inside
+    ``backend_compile`` late in the run (CPU backend).  Each module
+    recompiles what it needs; cross-module cache hits were never
+    load-bearing."""
+    yield
+    jax.clear_caches()
+
+
 @pytest.fixture(scope="session")
 def key():
     return jax.random.key(20260711)

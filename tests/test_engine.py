@@ -68,8 +68,8 @@ def test_target_state_commit_consistency(arch, dense_pair):
     scfg = E.SpecConfig(K=3, watermark="gumbel")
     state = E.init_state(tp, dp, tcfg, dcfg, scfg, PROMPTS, 64, KEY)
     step = jax.jit(E.make_spec_step(tcfg, dcfg, scfg))
-    st, out = step(tp, dp, state, KEY)
-    st, out2 = step(tp, dp, st, KEY)  # two steps (divergent per-seq pos)
+    st, out = step(tp, dp, state)
+    st, out2 = step(tp, dp, st)  # two steps (divergent per-seq pos)
     for b in range(PROMPTS.shape[0]):
         committed = list(np.asarray(PROMPTS[b]))
         committed.append(int(state["last"][b]))
@@ -104,7 +104,7 @@ def test_provenance_flag_matches_step_output(dense_pair):
     scfg = E.SpecConfig(K=3, watermark="gumbel")
     state = E.init_state(tp, dp, tcfg, dcfg, scfg, PROMPTS, 128, KEY)
     step = jax.jit(E.make_spec_step(tcfg, dcfg, scfg))
-    _, out = step(tp, dp, state, KEY)
+    _, out = step(tp, dp, state)
     res = E.generate(tp, dp, tcfg, dcfg, scfg, PROMPTS, n_tokens=12,
                      key=KEY)
     recs = pipeline.records_from_generation(res, E.make_decoder(scfg), KEY,
@@ -189,7 +189,7 @@ def test_spec_engine_is_lossless_in_distribution():
     def first_emitted(seed):
         key = jax.random.key(seed)
         state = E.init_state(tp, dp, tcfg, dcfg, scfg, prompts, 16, key)
-        _, out = step(tp, dp, state, key)
+        _, out = step(tp, dp, state)
         return out.out_tokens[0, 0]
 
     toks = jax.vmap(first_emitted)(jnp.arange(n) + 1000)

@@ -16,7 +16,8 @@ import sys
 
 import pytest
 
-_CORE_CASES = ["gumbel-fused-auto", "none-standard", "synthid-fused-auto"]
+_CORE_CASES = ["gumbel-fused-auto", "none-standard", "synthid-fused-auto",
+               "mixed-key-gumbel", "mixed-key-synthid"]
 _VARIANT_CASES = ["gumbel-fused-off", "gumbel-recurrent-draft"]
 
 
@@ -92,12 +93,38 @@ def _main(cases):
                 E.SpecConfig(K=2, watermark="gumbel")
         raise ValueError(case)
 
+    # mixed-key batches: every row under its own key word — the per-slot
+    # key/strength rows shard with the batch dim
+    mixed_keys = jax.numpy.asarray(
+        np.arange(8, dtype=np.uint32) * 0x01010101 + 7)
+
     for case in cases:
-        dcfg, dpar, scfg = cfg_for(case)
+        if case.startswith("mixed-key-"):
+            wm = case.split("-")[-1]
+            dcfg, dpar = dense, dp
+            scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+            gen_key = mixed_keys
+        else:
+            dcfg, dpar, scfg = cfg_for(case)
+            gen_key = KEY
         r0 = E.generate(tp, dpar, tcfg, dcfg, scfg, prompts, n_tokens=10,
-                        key=KEY)
+                        key=gen_key)
         r1 = E.generate(tp, dpar, tcfg, dcfg, scfg, prompts, n_tokens=10,
-                        key=KEY, mesh=mesh)
+                        key=gen_key, mesh=mesh)
+        if case.startswith("mixed-key-"):
+            assert np.array_equal(np.asarray(r1.keys),
+                                  np.asarray(mixed_keys)), case
+            # row 3 of the sharded mixed batch == solo run under key 3
+            b = 3
+            solo = E.generate(tp, dpar, tcfg, dcfg, scfg,
+                              prompts[b:b + 1], n_tokens=10,
+                              key=int(mixed_keys[b]))
+            n = int(solo.lengths[0])
+            assert int(r1.lengths[b]) == n, case
+            for f in ("tokens", "u", "ctx_hashes", "y_draft", "y_target"):
+                assert np.array_equal(
+                    np.asarray(getattr(r1, f))[b, :n],
+                    np.asarray(getattr(solo, f))[0, :n]), (case, f)
         for f in ("tokens", "u", "ctx_hashes", "from_draft", "masked",
                   "lengths", "y_draft", "y_target"):
             a, b = getattr(r0, f), getattr(r1, f)
@@ -119,8 +146,8 @@ def _main(cases):
     step = E.jitted_spec_step(tcfg, dense, E.SpecConfig(K=3), mesh,
                               state_abs=state_abs, t_shardings=t_sh,
                               d_shardings=d_sh)
-    step.lower(M.abstract_params(tcfg), M.abstract_params(dense), state_abs,
-               jax.ShapeDtypeStruct((), jax.random.key(0).dtype)).compile()
+    step.lower(M.abstract_params(tcfg), M.abstract_params(dense),
+               state_abs).compile()
     print("SHARDED STEP LOWERED")
 
 

@@ -1,0 +1,273 @@
+"""Multi-tenant keying: KeyPool refcount/rotation/fingerprints, the
+tier -> gamma strength controller, mixed-key batch bit-exactness (every
+slot bit-identical to a solo ``generate()`` under its own key), and
+cross-key detection isolation (a text verifies under its serving key
+only, and the multi-key sweep attributes it to that key)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import tradeoff
+from repro.serve import keys as KZ
+
+V = 96
+
+
+@pytest.fixture(scope="module")
+def pair():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    tcfg = get_smoke_config("yi-6b", vocab=V, d_model=64, d_ff=128,
+                            n_heads=2, n_kv_heads=2, head_dim=32)
+    dcfg = get_smoke_config("yi-6b", n_layers=1, vocab=V, d_model=32,
+                            d_ff=64, n_heads=2, n_kv_heads=2, head_dim=16)
+    tp = M.init_params(jax.random.key(0), tcfg)
+    dp = M.init_params(jax.random.key(1), dcfg)
+    return tcfg, dcfg, tp, dp
+
+
+# ---------------------------------------------------------------------------
+# KeyPool
+# ---------------------------------------------------------------------------
+
+
+def test_pool_derivation_is_pure_and_distinct():
+    a = KZ.derive_key_word(1234, 0, 0)
+    assert a == KZ.derive_key_word(1234, 0, 0)
+    words = {KZ.derive_key_word(1234, e, i)
+             for e in range(3) for i in range(4)}
+    assert len(words) == 12          # epochs and indices never collide
+    import jax
+    assert KZ.derive_key_word(jax.random.key(7), 0, 0) == \
+        KZ.derive_key_word(jax.random.key(7), 0, 0)
+
+
+def test_pool_acquire_balances_and_refcounts():
+    pool = KZ.KeyPool(1234, n_keys=3)
+    got = [pool.acquire() for _ in range(6)]
+    # least-loaded assignment: two refs per active word
+    assert sorted(pool.refcount(w) for w in pool.active_words) == [2, 2, 2]
+    assert set(got) == set(pool.active_words)
+    for w in got:
+        pool.release(w)
+    assert pool.live_words == []
+    with pytest.raises(ValueError, match="release of unacquired"):
+        pool.release(got[0])
+
+
+def test_pool_explicit_key_is_refcounted_and_attributable():
+    pool = KZ.KeyPool(1234, n_keys=2)
+    w = pool.acquire(key=0x3039)
+    assert w == 0x3039 and pool.refcount(w) == 1
+    fp = pool.fingerprint(w)
+    assert fp == "00003039" and pool.lookup(fp) == w
+    assert w in pool.known_words()
+    pool.release(w)
+    assert pool.refcount(w) == 0
+
+
+def test_pool_rotation_drains_in_flight_words():
+    pool = KZ.KeyPool(1234, n_keys=2, epoch=0)
+    old = pool.acquire()
+    assert pool.rotate() == 1
+    assert old not in pool.active_words       # retired for new requests
+    assert old in pool.live_words             # ...but still in flight
+    new = pool.acquire()
+    assert new in pool.active_words and new != old
+    # attribution spans epochs: every word ever handed out stays known
+    assert {old, new} <= set(pool.known_words())
+    pool.release(old)
+    assert old not in pool.live_words
+
+
+# ---------------------------------------------------------------------------
+# StrengthController
+# ---------------------------------------------------------------------------
+
+
+def _synthetic_curve():
+    # efficiency falls linearly as gamma rises: eff(g) = 1 - 0.5 g
+    g = np.linspace(0.0, 1.0, 11)
+    return tradeoff.Curve(label="synthetic", efficiency=1.0 - 0.5 * g,
+                          strength=g.copy(), gammas=g)
+
+
+def test_controller_picks_largest_gamma_meeting_floor():
+    ctrl = KZ.StrengthController(curve=_synthetic_curve(),
+                                 tiers={"fast": 0.9, "full": 0.0})
+    # eff >= 0.9  <=>  g <= 0.2
+    assert ctrl.pick("fast") == pytest.approx(0.2)
+    assert ctrl.pick("full") == pytest.approx(1.0)
+    # cached second read
+    assert ctrl.pick("fast") == pytest.approx(0.2)
+
+
+def test_controller_accepts_curve_factory_and_default_tiers():
+    calls = []
+
+    def factory():
+        calls.append(1)
+        return _synthetic_curve()
+
+    ctrl = KZ.StrengthController(curve=factory)
+    for tier in KZ.DEFAULT_TIERS:
+        assert 0.0 <= ctrl.pick(tier) <= 1.0
+    assert ctrl.pick("assurance") == pytest.approx(1.0)
+    assert ctrl.pick("latency") <= ctrl.pick("balanced")
+    assert len(calls) == 1           # curve evaluated once, then cached
+
+
+def test_controller_unknown_tier_raises_and_none_is_zero():
+    ctrl = KZ.StrengthController(curve=_synthetic_curve())
+    with pytest.raises(ValueError, match="unknown strength tier"):
+        ctrl.pick("turbo")
+    off = KZ.StrengthController(decoder_name="none",
+                                curve=_synthetic_curve())
+    assert off.pick("assurance") == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Mixed-key batches: bit-exactness + detection isolation.
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_key_generate_rows_match_solo(pair):
+    """A (B,) key-word vector serves every row under its own key: each
+    row's full stream (tokens, coins, stats) is bit-identical to the solo
+    single-key run — gumbel and the synthid tournament alike."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    prompts = jax.random.randint(jax.random.key(2), (3, 8), 1, V)
+    words = jnp.asarray([0x1111, 0xBEEF, 0x7777], jnp.uint32)
+    for wm in ("gumbel", "synthid"):
+        scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+        mixed = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=12,
+                           key=words)
+        assert np.array_equal(np.asarray(mixed.keys), np.asarray(words))
+        for b in range(3):
+            solo = E.generate(tp, dp, tcfg, dcfg, scfg, prompts[b:b + 1],
+                              n_tokens=12, key=int(words[b]))
+            n = int(solo.lengths[0])
+            assert int(mixed.lengths[b]) == n, (wm, b)
+            for f in ("tokens", "u", "ctx_hashes", "from_draft", "masked",
+                      "y_draft", "y_target"):
+                np.testing.assert_array_equal(
+                    np.asarray(getattr(mixed, f))[b, :n],
+                    np.asarray(getattr(solo, f))[0, :n],
+                    err_msg=f"{wm} row {b} {f}")
+
+
+def test_scheduler_mixed_keys_detect_under_own_key_only(pair):
+    """Two slots, two explicit keys: each request's records score high
+    under its own key and near-null under the other, and the multi-key
+    sweep attributes every text to its serving key (served fast path on
+    the matching cell only)."""
+    import jax
+    from repro.core.detection import multikey, pipeline
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    rng = np.random.default_rng(0)
+    k_a, k_b = 0xA11CE, 0xB0B
+    reqs = [{"prompt": rng.integers(1, V, size=6).astype(np.int32),
+             "n_tokens": 24, "key": (k_a, k_b)[i % 2], "uid": i}
+            for i in range(4)]
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    dec = E.make_decoder(scfg)
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=jax.random.key(1234), sync_every=2)
+    assert [r.key_word for r in results] == [k_a, k_b, k_a, k_b]
+    assert results[0].key_fingerprint == "000a11ce"
+    for r in results:
+        own = multikey.record_score(pipeline.records_from_generation(
+            r.as_generation_result(), dec, r.key_word, tcfg.vocab)[0])
+        other = k_b if r.key_word == k_a else k_a
+        foreign = multikey.record_score(pipeline.records_from_generation(
+            r.as_generation_result(), dec, other, tcfg.vocab)[0])
+        assert own > 3.0, (r.uid, own)
+        assert foreign < 3.0, (r.uid, foreign)
+        assert own > foreign + 2.0, (r.uid, own, foreign)
+    report = multikey.score_texts_by_keys(results, [k_a, k_b], dec,
+                                          tcfg.vocab)
+    assert report.scores.shape == (4, 2)
+    assert report.fingerprints == ["000a11ce", "00000b0b"]
+    want = [0, 1, 0, 1]
+    np.testing.assert_array_equal(report.best, want)
+    assert report.attributions(threshold=3.0) == \
+        [report.fingerprints[j] for j in want]
+    # the served buffers were consumed exactly on the matching cells
+    np.testing.assert_array_equal(
+        report.served_hit, np.eye(2, dtype=bool)[want])
+
+
+def test_scheduler_pool_keys_match_solo_and_release(pair):
+    """Pool-keyed scheduling keeps the slot-isolation invariant: each
+    request is bit-identical to solo ``generate()`` under its pool word,
+    and every ref drains by the time the queue does."""
+    import jax
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    pool = KZ.KeyPool(jax.random.key(1234), n_keys=2)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(1, V, size=5).astype(np.int32)
+               for _ in range(4)]
+    reqs = [{"prompt": p, "n_tokens": 8, "uid": i}
+            for i, p in enumerate(prompts)]
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=jax.random.key(1234), sync_every=2,
+                               key_pool=pool)
+    assert pool.live_words == []               # every ref released at flush
+    assert {r.key_word for r in results} <= set(pool.known_words())
+    for r in results:
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          prompts[r.uid][None], n_tokens=8,
+                          key=r.key_word)
+        n = int(solo.lengths[0])
+        assert r.length == n
+        np.testing.assert_array_equal(r.tokens, solo.tokens[0, :n],
+                                      err_msg=f"req {r.uid}")
+        np.testing.assert_array_equal(r.u, solo.u[0, :n])
+
+
+def test_scheduler_tier_strength_rides_result(pair):
+    """A tiered request serves at the controller's gamma and reports it;
+    gamma=0 requests emit no watermark evidence (all-masked positions)."""
+    import jax
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    ctrl = KZ.StrengthController(curve=lambda: tradeoff.Curve(
+        label="s", efficiency=np.array([1.0, 0.5]),
+        strength=np.array([0.0, 1.0]), gammas=np.array([0.0, 1.0])))
+    rng = np.random.default_rng(2)
+    reqs = [{"prompt": rng.integers(1, V, size=6).astype(np.int32),
+             "n_tokens": 10, "uid": i, "tier": t}
+            for i, t in enumerate(["latency", "assurance"])]
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=jax.random.key(1234), sync_every=2,
+                               strength_controller=ctrl)
+    by_uid = {r.uid: r for r in results}
+    assert by_uid[0].strength == 0.0 and by_uid[0].tier == "latency"
+    assert by_uid[1].strength == 1.0 and by_uid[1].tier == "assurance"
+    assert np.all(by_uid[0].masked)            # fully gated -> all plain
+    assert not np.all(by_uid[1].masked)
+    # unknown tier is rejected loudly at intake, not served quietly
+    bad = [{"prompt": reqs[0]["prompt"], "n_tokens": 4, "tier": "warp"}]
+    with pytest.raises(ValueError, match="unknown strength tier"):
+        E.serve_requests(tp, dp, tcfg, dcfg, scfg, bad, batch=2,
+                         key=jax.random.key(1234),
+                         strength_controller=ctrl)
+
+
+def test_request_intake_rejects_unknown_fields():
+    from repro.serve.scheduler import as_request
+    with pytest.raises(ValueError, match="unknown request fields"):
+        as_request({"prompt": np.ones(4, np.int32), "n_tokens": 4,
+                    "kye": 7})
+    r = as_request({"prompt": np.ones(4, np.int32), "n_tokens": 4,
+                    "key": 7, "tier": "latency"})
+    assert r.key == 7 and r.tier == "latency"

@@ -1,6 +1,7 @@
 """Fused watermarked verification tail: Pallas kernel vs jnp mirror
 (bit-exact) for both tail kinds — the Gumbel race and the SynthID
-m-round tournament — and the fused engine path vs the jnp engine tail
+m-round tournament — with per-row key words (the mixed-key batch is the
+default shape here), and the fused engine path vs the jnp engine tail
 (token-identical for the same PRF key)."""
 import dataclasses
 
@@ -11,25 +12,26 @@ import pytest
 
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
 
+from repro.core import prf
 from repro.core.watermark.base import FusedTail
 from repro.kernels import ops, ref
 
 KEY = jax.random.key(1234)
 
 
-def _inputs(B, K, V, seed=0, seen_frac=0.3, draws=False):
+def _inputs(B, K, V, seed=0, seen_frac=0.3, mixed_keys=True):
     ks = jax.random.split(jax.random.key(seed), 8)
     p = jax.nn.softmax(jax.random.normal(ks[0], (B, K + 1, V)))
     q = jax.nn.softmax(jax.random.normal(ks[1], (B, K, V)))
     toks = jax.random.randint(ks[2], (B, K), 0, V)
     u = jax.random.uniform(ks[3], (B, K))
-    wms = jax.random.bits(ks[4], (B, K + 1), dtype=jnp.uint32)
-    pls = jax.random.bits(ks[5], (B, K + 1), dtype=jnp.uint32)
+    if mixed_keys:   # every row under its own key word — the hard case
+        keys = jax.random.bits(ks[4], (B,), dtype=jnp.uint32)
+    else:
+        keys = jnp.full((B,), prf.as_key_word(KEY), jnp.uint32)
+    ctx = jax.random.bits(ks[5], (B, K + 1), dtype=jnp.uint32)
     seen = (jax.random.uniform(ks[6], (B, K + 1)) < seen_frac)
-    if not draws:
-        return p, q, toks, u, wms, pls, seen
-    dws = jax.random.bits(ks[7], (B, K + 1), dtype=jnp.uint32)
-    return p, q, toks, u, wms, pls, seen, dws
+    return p, q, toks, u, keys, ctx, seen
 
 
 def _assert_match(outs_k, outs_r, msg=""):
@@ -44,22 +46,23 @@ def _assert_match(outs_k, outs_r, msg=""):
 def test_kernel_matches_ref_sweep(B, K, V):
     args = _inputs(B, K, V, seed=B * K + V)
     outs_k = ops.spec_verify_wm(*args, interpret=True)
-    outs_r = jax.jit(ref.spec_verify_wm_ref)(*args)
+    outs_r = jax.jit(ref.spec_verify_wm_ref, static_argnames=("streams",))(
+        *args, streams=ops.DEFAULT_STREAMS)
     _assert_match(outs_k, outs_r, f"{(B, K, V)}")
 
 
 def test_all_accept_emits_bonus():
     """u = 0 accepts every slot: n_acc = K and the extra token races over
-    the bonus distribution p_K."""
+    the bonus distribution p_K, seeded from the per-row key word and the
+    bonus slot's context hash."""
     B, K, V = 3, 4, 257
-    p, q, toks, _, wms, pls, seen = _inputs(B, K, V, seed=1, seen_frac=0.0)
+    p, q, toks, _, keys, ctx, seen = _inputs(B, K, V, seed=1, seen_frac=0.0)
     u = jnp.zeros((B, K))
-    n_acc, acc, etok, eu = ops.spec_verify_wm(p, q, toks, u, wms, pls, seen,
-                                              interpret=True)
+    n_acc, acc, etok, eu = ops.spec_verify_wm(p, q, toks, u, keys, ctx,
+                                              seen, interpret=True)
     assert np.all(np.asarray(n_acc) == K)
     assert np.all(np.asarray(acc) == 1)
-    # mirror of the race over p_K with the zeta^T seed
-    from repro.core import prf
+    # mirror of the race over p_K with the ζ^T seed chained from the key
     w = jnp.arange(V, dtype=jnp.uint32)
 
     def bonus_ref(pr, s):
@@ -68,7 +71,8 @@ def test_all_accept_emits_bonus():
                        -jnp.inf)
         return jnp.argmax(sc)
 
-    want = jax.vmap(bonus_ref)(p[:, K], wms[:, K])
+    wm_bonus = prf.wm_seed(keys, ctx[:, K], prf.STREAM_TARGET)
+    want = jax.vmap(bonus_ref)(p[:, K], wm_bonus)
     assert np.array_equal(np.asarray(etok), np.asarray(want))
     assert np.all((np.asarray(eu) > 0) & (np.asarray(eu) < 1))
 
@@ -77,9 +81,9 @@ def test_first_slot_reject_emits_residual():
     """u = 1 rejects slot 0: n_acc = 0 and the extra token races over
     (p_0 − q_0)_+ (never a token where q >= p)."""
     B, K, V = 3, 4, 128
-    p, q, toks, _, wms, pls, seen = _inputs(B, K, V, seed=2, seen_frac=0.0)
+    p, q, toks, _, keys, ctx, seen = _inputs(B, K, V, seed=2, seen_frac=0.0)
     u = jnp.ones((B, K))
-    n_acc, acc, etok, _ = ops.spec_verify_wm(p, q, toks, u, wms, pls, seen,
+    n_acc, acc, etok, _ = ops.spec_verify_wm(p, q, toks, u, keys, ctx, seen,
                                              interpret=True)
     assert np.all(np.asarray(n_acc) == 0)
     assert np.all(np.asarray(acc) == 0)
@@ -89,24 +93,46 @@ def test_first_slot_reject_emits_residual():
 
 
 def test_seen_mask_switches_stream():
-    """With all slots seen, output depends only on the plain seeds; with no
-    slot seen, only on the watermark seeds."""
+    """With all slots seen, output depends only on the plain streams; with
+    no slot seen, only on the watermark stream — verified by perturbing
+    the static stream ids the in-kernel seed chain consumes."""
     B, K, V = 2, 3, 128
-    p, q, toks, u, wms, pls, _ = _inputs(B, K, V, seed=3)
-    wms2 = wms ^ jnp.uint32(0xDEADBEEF)
-    pls2 = pls ^ jnp.uint32(0xBADC0FFE)
+    p, q, toks, u, keys, ctx, _ = _inputs(B, K, V, seed=3)
+    wm_s, pr_s, pb_s, dw_s = ops.DEFAULT_STREAMS
+    swapped_wm = (wm_s ^ 0x51, pr_s, pb_s, dw_s)
+    swapped_pl = (wm_s, pr_s ^ 0x51, pb_s ^ 0x37, dw_s)
     all_seen = jnp.ones((B, K + 1), bool)
     none_seen = jnp.zeros((B, K + 1), bool)
-    base = ops.spec_verify_wm(p, q, toks, u, wms, pls, all_seen,
+    base = ops.spec_verify_wm(p, q, toks, u, keys, ctx, all_seen,
                               interpret=True)
-    swap_wm = ops.spec_verify_wm(p, q, toks, u, wms2, pls, all_seen,
-                                 interpret=True)
-    _assert_match(base, swap_wm, "seen ignores wm seeds")
-    base = ops.spec_verify_wm(p, q, toks, u, wms, pls, none_seen,
+    swap_wm = ops.spec_verify_wm(p, q, toks, u, keys, ctx, all_seen,
+                                 streams=swapped_wm, interpret=True)
+    _assert_match(base, swap_wm, "seen ignores the wm stream")
+    base = ops.spec_verify_wm(p, q, toks, u, keys, ctx, none_seen,
                               interpret=True)
-    swap_pl = ops.spec_verify_wm(p, q, toks, u, wms, pls2, none_seen,
-                                 interpret=True)
-    _assert_match(base, swap_pl, "unseen ignores plain seeds")
+    swap_pl = ops.spec_verify_wm(p, q, toks, u, keys, ctx, none_seen,
+                                 streams=swapped_pl, interpret=True)
+    _assert_match(base, swap_pl, "unseen ignores the plain streams")
+    # and the key word is live data: changing it changes the race
+    alt = ops.spec_verify_wm(p, q, toks, u, keys ^ jnp.uint32(0xDEADBEEF),
+                             ctx, none_seen, interpret=True)
+    assert not np.array_equal(np.asarray(base[2]), np.asarray(alt[2]))
+
+
+def test_mixed_key_rows_match_per_key_calls():
+    """Row independence under mixed keys: a batch where every row carries
+    its own key word must equal B single-key calls row by row."""
+    B, K, V = 4, 3, 257
+    p, q, toks, u, keys, ctx, seen = _inputs(B, K, V, seed=7)
+    mixed = ops.spec_verify_wm(p, q, toks, u, keys, ctx, seen)
+    for b in range(B):
+        solo = ops.spec_verify_wm(
+            p[b:b + 1], q[b:b + 1], toks[b:b + 1], u[b:b + 1],
+            keys[b:b + 1], ctx[b:b + 1], seen[b:b + 1])
+        for a, s, nm in zip(mixed, solo, ["n_acc", "acc", "etok", "eu"]):
+            np.testing.assert_array_equal(np.asarray(a)[b:b + 1],
+                                          np.asarray(s),
+                                          err_msg=f"row {b} {nm}")
 
 
 def test_cpu_fast_path_matches_interpret():
@@ -144,8 +170,8 @@ def test_live_mask_skips_drained_rows():
 
 
 def _tournament_outs(args, tail, interpret):
-    p, q, toks, u, wms, pls, seen, dws = args
-    return ops.spec_verify_wm(p, q, toks, u, wms, pls, seen, None, dws,
+    p, q, toks, u, keys, ctx, seen = args
+    return ops.spec_verify_wm(p, q, toks, u, keys, ctx, seen, None,
                               tail=tail, interpret=interpret)
 
 
@@ -156,7 +182,7 @@ def _tournament_outs(args, tail, interpret):
     (3, 4, 257, 8, True), (2, 8, 1000, 30, True)])
 def test_tournament_kernel_matches_ref_sweep(B, K, V, m, degen):
     tail = FusedTail(kind="tournament", m=m, stat_dim=m, degenerate=degen)
-    args = _inputs(B, K, V, seed=B * K + V + m, draws=True)
+    args = _inputs(B, K, V, seed=B * K + V + m)
     outs_k = _tournament_outs(args, tail, True)     # staged Pallas program
     outs_r = _tournament_outs(args, tail, None)     # CPU jnp mirror
     for a, b, nm in zip(outs_k, outs_r, ["n_acc", "acc", "etok", "estat"]):
@@ -171,23 +197,19 @@ def test_tournament_tail_matches_host_decoder_sample():
     """All-reject coins pin the emitted slot to 0: the kernel's tournament
     resample of the (p_0 − q_0)_+ row must equal ``Decoder.sample`` on the
     same raw row (the host reference the engine's jnp tail uses); all-
-    accept coins pin the bonus slot K likewise."""
-    from repro.core import prf
+    accept coins pin the bonus slot K likewise.  The kernel sees only the
+    (B,) key-word row — the seed chain happens in VMEM."""
     from repro.core.watermark.base import get_decoder
     B, K, V, m = 3, 3, 257, 8
     dec = get_decoder("synthid", m=m)
     p, q, toks, _, _, _, _ = _inputs(B, K, V, seed=11, seen_frac=0.0)
     ctx = jax.random.bits(jax.random.key(5), (B, K + 1), dtype=jnp.uint32)
-    wms = jax.vmap(jax.vmap(
-        lambda ch: prf.wm_seed(KEY, ch, prf.STREAM_TARGET)))(ctx)
-    dws = jax.vmap(jax.vmap(lambda ch: prf.wm_seed(
-        KEY, ch, prf.STREAM_PLAIN + prf.STREAM_TARGET)))(ctx)
-    pls = jnp.zeros((B, K + 1), jnp.uint32)
+    keys = jnp.full((B,), prf.as_key_word(KEY), jnp.uint32)
     seen = jnp.zeros((B, K + 1), bool)
     tail = FusedTail(kind="tournament", m=m, stat_dim=m, degenerate=False)
     for u, slot in [(jnp.ones((B, K)), 0), (jnp.zeros((B, K)), K)]:
         n_acc, _, etok, estat = ops.spec_verify_wm(
-            p, q, toks, u, wms, pls, seen, None, dws, tail=tail,
+            p, q, toks, u, keys, ctx, seen, None, tail=tail,
             interpret=True)
         assert np.all(np.asarray(n_acc) == slot)
         row = (p[:, slot] - q[:, slot] if slot < K else p[:, K])
@@ -209,7 +231,7 @@ def test_tournament_tail_property(b, k, v, m, degen, seed):
     """Property: kernel == mirror bit-exactly for arbitrary shapes, round
     counts and degenerate/finite draws."""
     tail = FusedTail(kind="tournament", m=m, stat_dim=m, degenerate=degen)
-    args = _inputs(b, k, v, seed=seed % 9973, draws=True)
+    args = _inputs(b, k, v, seed=seed % 9973)
     outs_k = _tournament_outs(args, tail, True)
     outs_r = _tournament_outs(args, tail, None)
     for a, b_, nm in zip(outs_k, outs_r, ["n_acc", "acc", "etok", "estat"]):
@@ -218,13 +240,13 @@ def test_tournament_tail_property(b, k, v, m, degen, seed):
 
 def test_tournament_live_mask_skips_drained_rows():
     tail = FusedTail(kind="tournament", m=6, stat_dim=6, degenerate=False)
-    args = _inputs(4, 3, 257, seed=5, draws=True)
+    args = _inputs(4, 3, 257, seed=5)
     live = jnp.array([1, 0, 1, 0], jnp.int32)
     lv = np.asarray(live, bool)
     base = _tournament_outs(args, tail, None)
-    p, q, toks, u, wms, pls, seen, dws = args
+    p, q, toks, u, keys, ctx, seen = args
     for interp in (None, True):
-        outs = ops.spec_verify_wm(p, q, toks, u, wms, pls, seen, live, dws,
+        outs = ops.spec_verify_wm(p, q, toks, u, keys, ctx, seen, live,
                                   tail=tail, interpret=interp)
         for a, m_, nm in zip(base, outs, ["n_acc", "acc", "etok", "estat"]):
             a, m_ = np.asarray(a), np.asarray(m_)
@@ -298,8 +320,8 @@ def test_engine_fused_matches_jnp_tail(engine_pair, wm, K):
     step_j = jax.jit(E.make_spec_step(tcfg, dcfg, sc_j))
     st_f, st_j = state, state
     for _ in range(3):   # divergent per-sequence positions after step 1
-        st_f, o_f = step_f(tp, dp, st_f, KEY)
-        st_j, o_j = step_j(tp, dp, st_j, KEY)
+        st_f, o_f = step_f(tp, dp, st_f)
+        st_j, o_j = step_j(tp, dp, st_j)
         for name in ("out_tokens", "out_len", "n_accepted", "from_draft",
                      "u", "ctx_hashes", "masked", "y_draft", "y_target"):
             a = np.asarray(getattr(o_f, name))
@@ -364,6 +386,7 @@ def test_served_stats_match_recovery(engine_pair):
         res = E.generate(tp, dp, tcfg, dcfg, scfg, prompts, n_tokens=12,
                          key=KEY)
         assert res.stat_scheme == dec.name
+        assert res.keys is not None   # per-row key words ride the result
         served = pipeline.records_from_generation(res, dec, KEY, tcfg.vocab)
         recovered = pipeline.records_from_generation(res, dec, KEY,
                                                      tcfg.vocab,
@@ -382,8 +405,8 @@ def test_served_stats_match_recovery(engine_pair):
                                                    use_served=False)
         np.testing.assert_array_equal(alt[0].y_draft, ref_alt[0].y_draft)
         # ...nor may a DIFFERENT detection key (wrong-key false-positive
-        # calibration): the served key-A stats must be re-recovered under
-        # key B, not echoed back
+        # calibration): the per-row key gate compares the result's served
+        # key words against the detection key and falls back to recovery
         key_b = jax.random.key(999)
         wk = pipeline.records_from_generation(res, dec, key_b, tcfg.vocab)
         wk_ref = pipeline.records_from_generation(res, dec, key_b,
