@@ -16,7 +16,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma list: fig1,tab1,fig2,kernels,spec_step,"
-                         "spec_step_keyed,paged_decode,roofline")
+                         "spec_step_keyed,paged_decode,prefix_cache,"
+                         "roofline")
     ap.add_argument("--fast", action="store_true",
                     help="reduced sample counts (CI mode)")
     ap.add_argument("--quick", action="store_true",
@@ -26,7 +27,8 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
-        only = {"kernels", "spec_step", "spec_step_keyed", "paged_decode"}
+        only = {"kernels", "spec_step", "spec_step_keyed", "paged_decode",
+                "prefix_cache"}
 
     def want(name):
         return only is None or name in only
@@ -70,6 +72,10 @@ def main() -> None:
         from benchmarks import spec_step_bench
         section("paged_decode",
                 lambda: spec_step_bench.run_paged(quick=args.quick))
+    if want("prefix_cache"):
+        from benchmarks import spec_step_bench
+        section("prefix_cache",
+                lambda: spec_step_bench.run_prefix_cache(quick=args.quick))
     if want("roofline"):
         from benchmarks import roofline
 

@@ -249,9 +249,14 @@ def run_keyed(quick: bool = False, verbose: bool = True):
 
 def _serve_timed(tp, dp, tcfg, dcfg, scfg, reqs, *, batch, key,
                  sync_every=4, paged_kw=None):
-    """Serve ``reqs`` twice through ONE scheduler instance — the first
-    drain compiles (loop, admission, chunk/finalize), the second reuses
-    every jit — and time the second.  Returns (results, seconds)."""
+    """Serve ``reqs`` twice through ONE scheduler instance and time BOTH
+    drains: the first pays every jit compile its mode needs (dense: one
+    prefill per distinct prompt length + the loop; paged: the fixed
+    chunk/finalize/table jits), the second reuses warm jits.  Returning
+    the two walls separately keeps compile cost out of the steady-state
+    throughput columns — folding the dense path's admission compiles
+    into the timed drain is what inflated the old headline ratio.
+    Returns (results, cold_s, steady_s)."""
     from repro.serve.scheduler import Scheduler
     sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=batch, key=key,
                       max_tokens=max(n for _, n in reqs),
@@ -259,12 +264,14 @@ def _serve_timed(tp, dp, tcfg, dcfg, scfg, reqs, *, batch, key,
                       sync_every=sync_every, **(paged_kw or {}))
     for p, n in reqs:
         sched.submit(p, n)
-    sched.run()                                   # warmup drain (compiles)
+    t0 = time.perf_counter()
+    sched.run()                                   # cold drain (compiles)
+    dt_cold = time.perf_counter() - t0
     uids = [sched.submit(p, n) for p, n in reqs]
     t0 = time.perf_counter()
     sched.run()
-    dt = time.perf_counter() - t0
-    return [sched.results[u] for u in uids], dt
+    dt_steady = time.perf_counter() - t0
+    return [sched.results[u] for u in uids], dt_cold, dt_steady
 
 
 def run_paged(quick: bool = False, verbose: bool = True):
@@ -296,10 +303,11 @@ def run_paged(quick: bool = False, verbose: bool = True):
         paged_kw = dict(page_size=ps,
                         num_pages=B * (-(-max_seq // ps)) + 2,
                         prefill_chunk=min(16, S))
-        res_d, dt_d = _serve_timed(tp, dp, tcfg, dcfg, scfg, reqs,
-                                   batch=B, key=key)
-        res_p, dt_p = _serve_timed(tp, dp, tcfg, dcfg, scfg, reqs,
-                                   batch=B, key=key, paged_kw=paged_kw)
+        res_d, cold_d, dt_d = _serve_timed(tp, dp, tcfg, dcfg, scfg, reqs,
+                                           batch=B, key=key)
+        res_p, cold_p, dt_p = _serve_timed(tp, dp, tcfg, dcfg, scfg, reqs,
+                                           batch=B, key=key,
+                                           paged_kw=paged_kw)
         identical = all(
             np.array_equal(a.tokens, b.tokens)
             and np.array_equal(a.u, b.u)
@@ -312,6 +320,8 @@ def run_paged(quick: bool = False, verbose: bool = True):
             "n_tokens": n_tok, "page_size": ps,
             "num_pages": paged_kw["num_pages"],
             "prefill_chunk": paged_kw["prefill_chunk"],
+            "cold_drain_s_dense": round(cold_d, 3),
+            "cold_drain_s_paged": round(cold_p, 3),
             "tok_per_s_dense": round(tps_d, 1),
             "tok_per_s_paged": round(tps_p, 1),
             "paged_over_dense": round(tps_p / tps_d, 3),
@@ -320,6 +330,8 @@ def run_paged(quick: bool = False, verbose: bool = True):
         if verbose:
             r = rows[-1]
             print(f"paged_decode,{kind},B={B},S={S},V={V},"
+                  f"cold_dense={r['cold_drain_s_dense']}s,"
+                  f"cold_paged={r['cold_drain_s_paged']}s,"
                   f"dense={r['tok_per_s_dense']}tok/s,"
                   f"paged={r['tok_per_s_paged']}tok/s,"
                   f"ratio={r['paged_over_dense']},exact={identical}",
@@ -327,13 +339,17 @@ def run_paged(quick: bool = False, verbose: bool = True):
     os.makedirs(ART, exist_ok=True)
     out = {"note": "paged (block-paged KV pool + chunked prefill) vs "
                    "dense-cache scheduler, identical request schedules; "
-                   "CPU measurement mode, second drain timed (jits warm). "
-                   "End-to-end wall including admission: the dense path "
-                   "prefills each admitted prompt eagerly (per-length "
-                   "compile + op-by-op dispatch), the paged path admits "
-                   "through the fixed-shape jitted chunk pipeline — the "
-                   "ratio above 1.0 is chunked admission, the decode loop "
-                   "itself is the same jitted while-loop in both modes",
+                   "CPU measurement mode.  cold_drain_s_* is the first "
+                   "drain through a fresh scheduler and includes every jit "
+                   "compile that mode triggers (dense: one prefill compile "
+                   "per distinct prompt length; paged: the fixed "
+                   "chunk/finalize/table jits).  tok_per_s_* and the ratio "
+                   "come from the second drain only, with every jit warm "
+                   "in BOTH modes — so the ratio measures steady-state "
+                   "admission + dispatch cost (eager per-prompt dense "
+                   "prefill vs the fixed-shape jitted chunk pipeline), "
+                   "not compile time.  The decode loop itself is the same "
+                   "jitted while-loop in both modes",
            "rows": rows}
     with open(os.path.join(ART, "paged_decode_bench.json"), "w") as f:
         json.dump(out, f, indent=1)
@@ -345,9 +361,129 @@ def run_paged(quick: bool = False, verbose: bool = True):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Prefix-cache admission economics (PR 8): N requests sharing one system
+# prompt, served with and without prefix-page sharing over the paged pool.
+# ---------------------------------------------------------------------------
+
+
+def run_prefix_cache(quick: bool = False, verbose: bool = True):
+    """Cold-miss vs warm-hit admission latency and pool pages held when N
+    requests share one system prompt.  Each mode (prefix cache off / on)
+    warms every jit on an unrelated prompt first, then serves one request
+    solo (cold: the system prefix has never been seen), one more solo
+    (hit iff the cache is on: only the tail prefills), then the remaining
+    requests as a batch to measure peak pool pages.  Token streams must
+    be bit-identical across modes.  Results land in
+    artifacts/prefix_cache_bench.json and (checked in)
+    BENCH_prefix_cache.json."""
+    from repro.serve.scheduler import Scheduler
+    key = jax.random.key(7)
+    B, K, V = 4, 4, 4096
+    ps, n_tok, N = 16, 8, 8
+    S_sys = 32 if quick else 64                   # full pages: S_sys // ps
+    tail = 8
+    tcfg, dcfg, tp, dp = _pair(V)
+    scfg = E.SpecConfig(K=K, watermark="gumbel")
+    rng = np.random.default_rng(23)
+    sysp = rng.integers(1, V, size=S_sys).astype(np.int32)
+    reqs = [(np.concatenate([sysp,
+                             rng.integers(1, V, size=tail).astype(np.int32)]),
+             n_tok) for _ in range(N)]
+    # warm prompt shares no prefix with sysp (first token differs by
+    # construction), so warming jits leaves the measured chain cold
+    warm_prompt = np.concatenate(
+        [np.asarray([(int(sysp[0]) % (V - 2)) + 1], np.int32),
+         rng.integers(1, V, size=S_sys + tail - 1).astype(np.int32)])
+    max_seq = S_sys + tail + 1 + (K + 1) * n_tok + 2
+    paged_kw = dict(page_size=ps,
+                    num_pages=(B + 1) * (-(-max_seq // ps)) + 2,
+                    prefill_chunk=16)
+
+    def n_chunks(sched, uid):
+        return sum(1 for e in sched.events
+                   if e[0] == "admit_chunk" and e[1] == uid)
+
+    def serve_mode(prefix_cache):
+        sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=B, key=key,
+                          max_tokens=n_tok,
+                          max_prompt_len=S_sys + tail,
+                          sync_every=4, prefix_cache=prefix_cache,
+                          **paged_kw)
+        sched.submit(warm_prompt, n_tok)
+        sched.run()                               # compiles, cache stays cold
+        uids = [sched.submit(*reqs[0])]
+        t0 = time.perf_counter()
+        sched.run()
+        dt_miss = time.perf_counter() - t0        # full-prompt prefill
+        uids.append(sched.submit(*reqs[1]))
+        t0 = time.perf_counter()
+        sched.run()
+        dt_hit = time.perf_counter() - t0         # tail-only iff cache on
+        uids += [sched.submit(*r) for r in reqs[2:]]
+        sched.run()
+        res = [sched.results[u] for u in uids]
+        return sched, res, dt_miss, dt_hit
+
+    rows = []
+    s_off, res_off, miss_off, hit_off = serve_mode(False)
+    s_on, res_on, miss_on, hit_on = serve_mode(True)
+    identical = all(np.array_equal(a.tokens, b.tokens)
+                    and np.array_equal(a.u, b.u)
+                    for a, b in zip(res_off, res_on))
+    stats = s_on.stats()
+    rows.append({
+        "B": B, "K": K, "V": V, "page_size": ps,
+        "sys_prompt_tokens": S_sys, "tail_tokens": tail, "n_requests": N,
+        "admit_s_miss_nocache": round(miss_off, 4),
+        "admit_s_repeat_nocache": round(hit_off, 4),
+        "admit_s_miss_cache": round(miss_on, 4),
+        "admit_s_hit_cache": round(hit_on, 4),
+        "hit_speedup": round(hit_off / hit_on, 3),
+        "prefill_chunks_miss": n_chunks(s_on, res_on[0].uid),
+        "prefill_chunks_hit": n_chunks(s_on, res_on[1].uid),
+        "pages_peak_private": s_off.stats()["pages_peak"],
+        "pages_peak_shared": stats["pages_peak"],
+        "prefix_hits": stats["prefix_hits"],
+        "prefix_pages_held": stats["prefix_pages"],
+        "identical_tokens": identical,
+    })
+    if verbose:
+        r = rows[0]
+        print(f"prefix_cache,S_sys={S_sys},N={N},"
+              f"miss={r['admit_s_miss_cache']}s,"
+              f"hit={r['admit_s_hit_cache']}s,"
+              f"hit_speedup={r['hit_speedup']},"
+              f"chunks={r['prefill_chunks_miss']}->"
+              f"{r['prefill_chunks_hit']},"
+              f"pages={r['pages_peak_private']}->"
+              f"{r['pages_peak_shared']},exact={identical}",
+              flush=True)
+    os.makedirs(ART, exist_ok=True)
+    out = {"note": "prefix-page sharing over the paged KV pool: one system "
+                   "prompt shared by N requests, cache off vs on, same "
+                   "request streams (bit-identical tokens asserted).  "
+                   "Admission walls are solo single-request drains on an "
+                   "idle scheduler with every jit warm, so miss vs hit "
+                   "isolates the skipped full-page prefill chunks; "
+                   "prefill_chunks_* is the structural witness.  "
+                   "pages_peak_* is the pool high-water mark over the "
+                   "whole run (warmup + solos + batch phase); CPU "
+                   "measurement mode",
+           "rows": rows}
+    with open(os.path.join(ART, "prefix_cache_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    if not quick:
+        root = os.path.join(os.path.dirname(__file__), "..")
+        with open(os.path.join(root, "BENCH_prefix_cache.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return rows
+
+
 if __name__ == "__main__":
     import sys
     quick = "--quick" in sys.argv
     if "--paged-only" not in sys.argv:
         run(quick=quick)
     run_paged(quick=quick)
+    run_prefix_cache(quick=quick)

@@ -97,7 +97,11 @@ def as_key_word(key) -> jnp.ndarray:
     collapsed deterministically by chaining its underlying data words —
     so legacy ``jax.random.key(s)`` call sites keep a stable identity."""
     if isinstance(key, (int, np.integer)):
-        return jnp.uint32(np.uint32(key))
+        # mask to the uint32 word explicitly: numpy 2 raises OverflowError
+        # on out-of-range np.uint32(...) conversion, and key identity must
+        # not depend on which layer (pool acquire vs release vs engine)
+        # happened to coerce first
+        return jnp.uint32(np.uint32(int(key) & 0xFFFFFFFF))
     arr = jnp.asarray(key)
     if jnp.issubdtype(arr.dtype, jax.dtypes.prng_key):
         data = jax.random.key_data(arr).astype(jnp.uint32)

@@ -86,6 +86,12 @@ def main():
                     help="paged admission prefills prompts in chunks of "
                          "this many tokens (one fixed compile, no decode "
                          "stall on long prompts)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share identical full-page prompt prefixes "
+                         "(system prompts, few-shot headers) across "
+                         "requests via refcounted KV pages; requires "
+                         "--page-size/--num-pages; results stay "
+                         "bit-identical to solo generation")
     args = ap.parse_args()
 
     if args.devices:
@@ -168,6 +174,9 @@ def main():
         eos = None if args.eos_id < 0 else args.eos_id
         if args.page_size and not args.num_pages:
             ap.error("--page-size requires --num-pages")
+        if args.prefix_cache and not args.page_size:
+            ap.error("--prefix-cache requires --page-size/--num-pages "
+                     "(prefix sharing lives on the paged KV pool)")
         from repro.serve import keys as KZ
         pool = (KZ.KeyPool(key, n_keys=args.key_pool)
                 if args.key_pool else None)
@@ -183,12 +192,15 @@ def main():
             page_size=args.page_size or None,
             num_pages=args.num_pages or None,
             prefill_chunk=args.prefill_chunk if args.page_size else None,
+            prefix_cache=args.prefix_cache,
             key_pool=pool, strength_controller=ctrl)
         tot = sum(r.length for r in results)
         alive = sum(r.alive_steps for r in results)
         acc = sum(r.n_accepted for r in results)
         paged = (f" paged(page_size={args.page_size}, "
-                 f"num_pages={args.num_pages})" if args.page_size else "")
+                 f"num_pages={args.num_pages}"
+                 + (", prefix-cache" if args.prefix_cache else "") + ")"
+                 if args.page_size else "")
         pooled = f" key-pool={args.key_pool}" if args.key_pool else ""
         print(f"arch={args.arch} watermark={args.watermark} "
               f"continuous batching{paged}{pooled}: {len(results)} "

@@ -1187,6 +1187,7 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                    page_size: Optional[int] = None,
                    num_pages: Optional[int] = None,
                    prefill_chunk: Optional[int] = None,
+                   prefix_cache: bool = False,
                    key_pool=None, strength_controller=None):
     """Continuous batching: serve a whole request list through ``batch``
     live slots, admitting queued prompts into freed slots at sync points
@@ -1202,6 +1203,13 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     ``page_size`` switches the KV caches to the block-paged pool
     (``num_pages`` pages shared by all slots, prompts admitted in
     ``prefill_chunk``-token chunks between decode sync points).
+    ``prefix_cache=True`` (paged mode only) additionally shares
+    identical full-page prompt prefixes across requests: repeated system
+    prompts keep one resident KV copy, admissions that hit skip the
+    shared prefix's prefill, and the scheduler's event log records each
+    hit as ``("admit_shared", uid, n_cached_tokens)``.  Results stay
+    bit-identical to solo ``generate()`` — KV pages depend only on
+    prompt tokens and weights, never on the per-slot watermark keys.
 
     ``key_pool`` (a ``serve.keys.KeyPool``) turns on multi-tenant keying:
     each request is served under its own per-slot key word (explicit
@@ -1225,7 +1233,7 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                       sync_every=sync_every, mesh=mesh,
                       shard_params=shard_params, page_size=page_size,
                       num_pages=num_pages, prefill_chunk=prefill_chunk,
-                      key_pool=key_pool,
+                      prefix_cache=prefix_cache, key_pool=key_pool,
                       strength_controller=strength_controller)
     sched.submit_many(reqs)
     return sched.run()

@@ -95,17 +95,23 @@ class KeyPool:
         if key is not None:
             word = _word_of(key)
         else:
-            word = min(self._active,
-                       key=lambda w: (self._refs.get(w, 0),
-                                      self._active.index(w)))
+            # one pass with the index carried along — the old
+            # ``self._active.index(w)`` tie-break re-scanned the list per
+            # element (O(n^2) per admission at large --key-pool N)
+            _, _, word = min((self._refs.get(w, 0), i, w)
+                             for i, w in enumerate(self._active))
         self._refs[word] = self._refs.get(word, 0) + 1
         self._seen.setdefault(fingerprint_of(word), word)
         return word
 
     def release(self, word: int) -> None:
         """Drop a ref; double-release raises (the refcount is the rotation
-        drain witness, so it must stay exact)."""
-        word = int(np.uint32(word))
+        drain witness, so it must stay exact).  Normalizes through the
+        same ``_word_of`` as the ``acquire`` explicit-key path, so any
+        key form acquired is the same word released (a bare
+        ``np.uint32(word)`` coercion raised OverflowError on the
+        out-of-range ints ``acquire`` happily masked)."""
+        word = _word_of(word)
         n = self._refs.get(word, 0)
         if n <= 0:
             raise ValueError(f"release of unacquired key word "
@@ -134,7 +140,7 @@ class KeyPool:
         return sorted(self._refs)
 
     def refcount(self, word: int) -> int:
-        return self._refs.get(int(np.uint32(word)), 0)
+        return self._refs.get(_word_of(word), 0)
 
     def fingerprint(self, word: int) -> str:
         return fingerprint_of(word)

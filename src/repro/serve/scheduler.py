@@ -27,6 +27,16 @@ chunk-shaped ``extend_step`` instead of one prefill per distinct prompt
 length.  The slot-isolation contract is unchanged and still enforced
 bit-exactly against dense solo ``generate()``.
 
+``prefix_cache=True`` (paged mode only) additionally shares identical
+prompt prefixes *across* requests: the allocator is refcounted, and a
+``PrefixCache`` keyed by chain digests over page-aligned token blocks
+lets admission point a new slot's table at already-resident pages for
+every full-page prefix hit, chunk-prefilling only the uncached tail.
+KV pages are a pure function of prompt tokens + weights — never of the
+per-slot watermark key/strength rows — so sharing is sound across
+tenants and keeps every request bit-identical to its solo
+``generate()``.
+
 The correctness contract is **slot isolation**: a request's committed
 tokens, provenance flags (``src``), acceptance coins, context hashes and
 repeated-context masks are bit-identical to a solo ``engine.generate()``
@@ -67,8 +77,9 @@ or, incrementally::
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Any, Deque, Dict, List, Optional, Sequence
+import hashlib
+from collections import OrderedDict, deque
+from typing import Any, Deque, Dict, List, Optional, Sequence, Set
 
 import jax
 import jax.numpy as jnp
@@ -197,7 +208,8 @@ class _Slot:
 
 
 class PageAllocator:
-    """Host-side free-list allocator over the physical KV page pool.
+    """Host-side **refcounted** free-list allocator over the physical KV
+    page pool.
 
     Page 0 is the reserved **null page**: it is never handed out, and an
     all-zero page-table row aliases every logical page to it — so freed
@@ -205,6 +217,14 @@ class PageAllocator:
     garbage no reader ever attends, instead of into pages that may have
     been reallocated to a new request.  The allocatable set is therefore
     ``{1, .., num_pages - 1}``.
+
+    Refcounts let multiple readers hold the same physical page (prefix
+    sharing): ``alloc`` hands out pages at refcount 1, ``share`` takes an
+    extra reference on a held page, and ``free`` *decrements* — a page
+    returns to the free list only when its last reference drops.  Shared
+    pages are read-only by construction (only completely written prompt
+    pages are ever shared; decode appends at ``pos >= S0`` and rollback
+    is pos-only), so no copy-on-write is needed.
     """
 
     def __init__(self, num_pages: int):
@@ -215,7 +235,8 @@ class PageAllocator:
         # stored descending so pop() hands out ascending ids (stable,
         # test-friendly); correctness never depends on the order
         self._free = list(range(num_pages - 1, 0, -1))
-        self._used: set = set()
+        self._refs: Dict[int, int] = {}       # page -> refcount (>= 1)
+        self.n_used_peak = 0                  # high-water mark of n_used
 
     @property
     def n_free(self) -> int:
@@ -223,11 +244,16 @@ class PageAllocator:
 
     @property
     def n_used(self) -> int:
-        return len(self._used)
+        return len(self._refs)
+
+    def refcount(self, page: int) -> int:
+        """Current reference count of ``page`` (0 if free)."""
+        return self._refs.get(int(page), 0)
 
     def alloc(self, n: int) -> List[int]:
-        """Take ``n`` pages off the free list; raises ``RuntimeError`` on
-        exhaustion (never hands out the null page or a page twice)."""
+        """Take ``n`` pages off the free list at refcount 1; raises
+        ``RuntimeError`` on exhaustion (never hands out the null page or
+        a held page twice)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
@@ -235,17 +261,197 @@ class PageAllocator:
                 f"KV page pool exhausted: need {n} pages, "
                 f"{len(self._free)} of {self.num_pages - 1} free")
         out = [self._free.pop() for _ in range(n)]
-        self._used.update(out)
+        for p in out:
+            self._refs[p] = 1
+        self.n_used_peak = max(self.n_used_peak, len(self._refs))
         return out
 
+    def share(self, page: int) -> int:
+        """Take one more reference on an already-held page (prefix-cache
+        hit pointing a new slot's table at it); the null page and free /
+        foreign ids raise."""
+        page = int(page)
+        if page not in self._refs:
+            raise ValueError(f"sharing page {page} that is not allocated "
+                             "(free, null page, or foreign id)")
+        self._refs[page] += 1
+        return self._refs[page]
+
     def free(self, pages: Sequence[int]) -> None:
-        """Return pages; double-frees and foreign ids raise."""
+        """Drop one reference per page; a page returns to the free list
+        when its count hits 0.  Over-frees and foreign ids raise."""
         for p in pages:
-            if p not in self._used:
+            p = int(p)
+            if p not in self._refs:
                 raise ValueError(f"freeing page {p} that is not allocated "
                                  "(double free, null page, or foreign id)")
-            self._used.remove(p)
-            self._free.append(p)
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._free.append(p)
+
+
+@dataclasses.dataclass
+class _PrefixEntry:
+    """One cached full page of prompt KV: the physical page plus its
+    position in the hash chain (parent = digest of the preceding block,
+    ``None`` at the root)."""
+    page: int
+    parent: Optional[str]
+    children: Set[str] = dataclasses.field(default_factory=set)
+
+
+class PrefixCache:
+    """Content-addressed cache of **full, immutable** prompt-prefix pages.
+
+    Keys are chain digests over page-aligned token blocks:
+    ``d_j = H(d_{j-1} || prompt[j*ps:(j+1)*ps])`` — so a digest commits to
+    the *entire* prefix through block ``j``, and two prompts share page
+    ``j`` iff their first ``(j+1)*ps`` tokens are identical.  KV contents
+    are a pure function of those tokens and the weights (never of the
+    per-slot watermark key/strength rows), which is exactly why sharing
+    is sound across tenants.
+
+    Only blocks fully covered by ``prompt[:S0-1]`` are share-eligible
+    (``(S0 - 1) // page_size`` of them): the last prompt token always
+    prefills privately so finalize has last-position logits to sample
+    from, and decode appends land at ``pos >= S0`` — never inside a
+    shared page.  The cache holds its own allocator reference per entry
+    (entries survive the inserting slot's flush); eviction pops LRU
+    entries whose page refcount is 1 (cache-only) and cascades to their
+    descendants — a slot always references a *contiguous* chain from the
+    root, so refcounts are monotone non-increasing along a chain and an
+    evictable parent implies evictable children."""
+
+    def __init__(self, allocator: PageAllocator, page_size: int):
+        self.allocator = allocator
+        self.page_size = int(page_size)
+        self._entries: "OrderedDict[str, _PrefixEntry]" = OrderedDict()
+        self.hits = 0          # blocks served from cache, cumulative
+        self.misses = 0        # share-eligible blocks prefilled privately
+        self.evictions = 0     # entries evicted, cumulative
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def n_entries(self) -> int:
+        return len(self._entries)
+
+    @property
+    def pages_held(self) -> int:
+        """Pages the cache currently references (one per entry)."""
+        return len(self._entries)
+
+    # -- keying ------------------------------------------------------------
+
+    @staticmethod
+    def block_digest(parent: Optional[str], block: np.ndarray) -> str:
+        h = hashlib.sha256()
+        h.update((parent or "").encode("ascii"))
+        h.update(np.ascontiguousarray(block, np.int32).tobytes())
+        return h.hexdigest()
+
+    def shareable_blocks(self, prompt: np.ndarray) -> int:
+        """Number of share-eligible full pages: those covered by
+        ``prompt[:S0-1]`` (the uncached tail keeps >= 1 token)."""
+        return (len(prompt) - 1) // self.page_size
+
+    def _chain(self, prompt: np.ndarray) -> List[str]:
+        digests, parent = [], None
+        ps = self.page_size
+        for j in range(self.shareable_blocks(prompt)):
+            d = self.block_digest(parent, prompt[j * ps:(j + 1) * ps])
+            digests.append(d)
+            parent = d
+        return digests
+
+    # -- lookup / insert / evict -------------------------------------------
+
+    def lookup(self, prompt: np.ndarray) -> tuple:
+        """Longest cached prefix chain of the prompt's share-eligible
+        blocks -> ``(digests, pages)``.  Hits refresh LRU recency
+        (ancestors first, so a chain evicts leaf-before-root).  No
+        references are taken — the caller ``share``s each page only once
+        admission is certain."""
+        digests: List[str] = []
+        pages: List[int] = []
+        for d in self._chain(prompt):
+            e = self._entries.get(d)
+            if e is None:
+                break
+            digests.append(d)
+            pages.append(e.page)
+        for d in digests:
+            self._entries.move_to_end(d)
+        self.hits += len(digests)
+        self.misses += self.shareable_blocks(prompt) - len(digests)
+        return digests, pages
+
+    def insert_chain(self, prompt: np.ndarray, hit_digests: List[str],
+                     slot_pages: Sequence[int]) -> int:
+        """Register a finalized slot's freshly written full-prefix pages
+        (the blocks *after* its admission-time hits).  The cache takes
+        its own allocator reference per new entry, so the pages outlive
+        the slot's flush.  A digest that raced in via another slot keeps
+        the incumbent entry (identical content — same token chain, same
+        weights); the caller's private page stays private.  Returns the
+        number of entries inserted."""
+        chain = self._chain(prompt)
+        parent = hit_digests[-1] if hit_digests else None
+        inserted = 0
+        for j in range(len(hit_digests), len(chain)):
+            d = chain[j]
+            incumbent = self._entries.get(d)
+            if incumbent is not None:
+                self._entries.move_to_end(d)
+                parent = d
+                continue
+            page = int(slot_pages[j])
+            self.allocator.share(page)
+            self._entries[d] = _PrefixEntry(page=page, parent=parent)
+            if parent is not None and parent in self._entries:
+                self._entries[parent].children.add(d)
+            inserted += 1
+            parent = d
+        return inserted
+
+    def evict(self, n_pages: int, protect: Set[str] = frozenset()) -> int:
+        """Free >= ``n_pages`` pages if possible by evicting LRU entries
+        whose page refcount is 1 (cache-only — pages still referenced by
+        live slots are skipped) and are not in ``protect`` (the hit chain
+        of the admission that triggered the eviction).  Evicting an entry
+        cascades to its descendants (see class docstring).  Returns the
+        number of pages actually returned to the free list."""
+        freed = 0
+        for d in list(self._entries):
+            if freed >= n_pages:
+                break
+            e = self._entries.get(d)
+            if e is None or d in protect:
+                continue           # already cascaded away, or protected
+            if self.allocator.refcount(e.page) > 1:
+                continue           # a live slot still reads this page
+            freed += self._evict_subtree(d)
+        return freed
+
+    def _evict_subtree(self, d: str) -> int:
+        e = self._entries.pop(d)
+        if e.parent is not None and e.parent in self._entries:
+            self._entries[e.parent].children.discard(d)
+        freed = 0
+        for c in list(e.children):
+            if c in self._entries:
+                freed += self._evict_subtree(c)
+        assert self.allocator.refcount(e.page) == 1, \
+            f"evicting cached page {e.page} still referenced by a slot"
+        self.allocator.free([e.page])
+        self.evictions += 1
+        return freed + 1
+
+    def clear(self) -> int:
+        """Drop every entry (all must be cache-only) and return the pages
+        to the pool; returns the number of pages freed."""
+        return self.evict(len(self._entries))
 
 
 def _write_slot_fn(state: Dict[str, Any], sub: Dict[str, Any], b
@@ -306,7 +512,14 @@ class Scheduler:
     with decode.  Pool exhaustion while *growing a live slot* raises
     ``RuntimeError`` (mid-request eviction is not supported) — size
     ``num_pages`` for the worst-case concurrently-live footprint;
-    admission itself simply waits for pages (head-of-line, FIFO kept)."""
+    admission itself simply waits for pages (head-of-line, FIFO kept).
+
+    ``prefix_cache=True`` shares full prompt-prefix pages across
+    requests (see the module docstring and ``PrefixCache``): admissions
+    whose prompts repeat a cached page-aligned prefix skip its prefill
+    entirely and reference the resident pages; flush drops references
+    instead of freeing, and cold cache entries are evicted LRU when the
+    pool runs short."""
 
     def __init__(self, t_params, d_params, tcfg: ModelConfig,
                  dcfg: ModelConfig, scfg: E.SpecConfig, *, batch: int,
@@ -316,6 +529,7 @@ class Scheduler:
                  page_size: Optional[int] = None,
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
                  key_pool=None, strength_controller=None):
         if scfg.accept != "pseudorandom":
             raise ValueError(
@@ -382,9 +596,19 @@ class Scheduler:
             self._slot_pages: List[List[int]] = [[] for _ in range(batch)]
             self._chunk_cursor = np.zeros((batch,), np.int64)
             self._total_chunks = 0                  # deadlock bound term
+            self._prefix = (PrefixCache(self._alloc, self.page_size)
+                            if prefix_cache else None)
+            # tokens already resident via shared pages at admission: the
+            # chunked prefill of slot b starts at this offset
+            self._prefill_base = np.zeros((batch,), np.int64)
+            self._slot_hit_digests: List[List[str]] = \
+                [[] for _ in range(batch)]
         elif num_pages is not None or prefill_chunk is not None:
             raise ValueError("num_pages/prefill_chunk need page_size "
                              "(paged mode)")
+        elif prefix_cache:
+            raise ValueError("prefix_cache=True needs the paged KV pool "
+                             "(pass page_size and num_pages)")
 
         self.queue: Deque[Request] = deque()
         self.slots = [_Slot() for _ in range(batch)]
@@ -393,8 +617,10 @@ class Scheduler:
         # witness asserted by the tests (result ordering itself is by uid)
         self.admit_order: List[int] = []
         # paged-mode event log: ("admit_chunk", uid, i) / ("finalize", uid)
-        # / ("flush", uid) in wall order — the no-stall interleaving
-        # witness (short requests flush *between* a long prompt's chunks)
+        # / ("flush", uid) / ("admit_shared", uid, n_cached_tokens) in
+        # wall order — the no-stall interleaving witness (short requests
+        # flush *between* a long prompt's chunks) and the prefix-hit
+        # witness asserted by the cache-parity tests
         self.events: List[tuple] = []
         self.results: Dict[int, RequestResult] = {}
         self._next_uid = 0
@@ -519,16 +745,14 @@ class Scheduler:
         """Assign the request's serving key word + strength gamma to slot
         ``b``: an explicit ``Request.key``, the pool's least-loaded active
         word, or the scheduler default; ``Request.tier`` goes through the
-        strength controller.  Pool words are refcounted until flush."""
-        pooled = False
-        if self.key_pool is not None:
-            word = self.key_pool.acquire(req.key)
-            pooled = True
-        elif req.key is not None:
-            word = int(np.asarray(jax.device_get(
-                prf.as_key_word(req.key))))
-        else:
-            word = self.key_word
+        strength controller.  Pool words are refcounted until flush.
+
+        Ordering matters for error hygiene: the tier -> gamma resolution
+        (which can raise on an unknown tier or a missing controller) runs
+        *before* ``KeyPool.acquire`` takes a reference, so a failed
+        resolution leaves the pool untouched.  Callers in turn resolve
+        before allocating pages or mutating slot state — a raise here
+        must leave the scheduler exactly as it was."""
         if req.tier is not None:
             if self.strength_controller is None:
                 raise ValueError(
@@ -538,6 +762,15 @@ class Scheduler:
             gamma = float(self.strength_controller.pick(req.tier))
         else:
             gamma = 1.0
+        pooled = False
+        if self.key_pool is not None:
+            word = self.key_pool.acquire(req.key)
+            pooled = True
+        elif req.key is not None:
+            word = int(np.asarray(jax.device_get(
+                prf.as_key_word(req.key))))
+        else:
+            word = self.key_word
         self._slot_key[b] = word
         self._slot_strength[b] = gamma
         self._slot_tier[b] = req.tier
@@ -554,9 +787,13 @@ class Scheduler:
                 break
             if slot.phase != FREE:
                 continue
-            req = self.queue.popleft()
-            slot.phase, slot.request = PREFILLING, req
+            req = self.queue[0]
+            # resolve key/tier BEFORE touching slot state: a resolution
+            # failure (unknown tier, pool misuse) must leave the slot
+            # FREE and the request queued, not strand it PREFILLING
             self._resolve_key(req, b)
+            self.queue.popleft()
+            slot.phase, slot.request = PREFILLING, req
             sub = E.init_state(self.t_params, self.d_params, self.tcfg,
                                self.dcfg, self.scfg, req.prompt[None],
                                self.max_seq, self._slot_key[b],
@@ -686,7 +923,21 @@ class Scheduler:
         """Reserve pages + page tables for queued prompts (FIFO with
         head-of-line blocking on pool space — never reorders) and mark
         their slots PREFILLING; the actual prompt tokens stream in via
-        ``_prefill_step``, one chunk per sync round."""
+        ``_prefill_step``, one chunk per sync round.
+
+        With a prefix cache, admission first looks up the prompt's
+        full-page prefix chain: every hit page is ``share``d into the new
+        slot's table (no prefill work), and only the uncached tail
+        allocates private pages and chunk-prefills — starting at the
+        cached-token offset (``_prefill_base``).  Under pool pressure the
+        cache evicts LRU cache-only entries (the hit chain itself is
+        protected) before admission gives up and waits head-of-line.
+
+        Order of operations is the error-hygiene contract: lookup and
+        eviction mutate nothing a failure could leak; ``_resolve_key``
+        (which can raise) runs before any page is allocated or any slot
+        state is touched; the share/alloc that follow cannot fail (free
+        space was just checked and the scheduler is single-threaded)."""
         n = 0
         for b, slot in enumerate(self.slots):
             if not self.queue:
@@ -694,16 +945,31 @@ class Scheduler:
             if slot.phase != FREE:
                 continue
             req = self.queue[0]
-            need = -(-len(req.prompt) // self.page_size)
+            total = -(-len(req.prompt) // self.page_size)
+            if self._prefix is not None:
+                digests, shared = self._prefix.lookup(req.prompt)
+            else:
+                digests, shared = [], []
+            need = total - len(shared)
+            if need > self._alloc.n_free and self._prefix is not None:
+                self._prefix.evict(need - self._alloc.n_free,
+                                   protect=set(digests))
             if need > self._alloc.n_free:
                 break
+            self._resolve_key(req, b)      # may raise: nothing held yet
             self.queue.popleft()
-            self._slot_pages[b] = self._alloc.alloc(need)
+            for p in shared:
+                self._alloc.share(p)
+            self._slot_pages[b] = list(shared) + self._alloc.alloc(need)
+            self._slot_hit_digests[b] = list(digests)
+            self._prefill_base[b] = len(shared) * self.page_size
             self.carry = self._set_table_jit(self.carry, jnp.int32(b),
                                              self._table_row(b))
             slot.phase, slot.request = PREFILLING, req
-            self._resolve_key(req, b)
             self._chunk_cursor[b] = 0
+            if shared:
+                self.events.append(
+                    ("admit_shared", req.uid, int(self._prefill_base[b])))
             n += 1
         return n
 
@@ -718,7 +984,12 @@ class Scheduler:
             req = slot.request
             S0, ck = len(req.prompt), self.prefill_chunk
             i = int(self._chunk_cursor[b])
-            start = i * ck
+            # prefix-cache hits are already resident: chunk i covers
+            # prompt[base + i*ck : base + (i+1)*ck] (base is 0 without a
+            # cache; the share-eligibility rule keeps base <= S0 - 1, so
+            # every slot prefills >= 1 token and finalize always has its
+            # last-position logits)
+            start = int(self._prefill_base[b]) + i * ck
             chunk = np.zeros((ck,), np.int32)
             chunk[:min(ck, S0 - start)] = req.prompt[start:start + ck]
             new_pos = min(start + ck, S0)
@@ -742,6 +1013,13 @@ class Scheduler:
             slot.phase = DECODING
             self.admit_order.append(req.uid)
             self.events.append(("finalize", req.uid))
+            if self._prefix is not None:
+                # every share-eligible block is now fully written: hand
+                # the new full-prefix pages to the cache (it takes its
+                # own refs, so they survive this slot's flush)
+                self._prefix.insert_chain(req.prompt,
+                                          self._slot_hit_digests[b],
+                                          self._slot_pages[b])
 
     def _ensure_pages(self) -> None:
         """Grow every live DECODING slot's page run to cover the next
@@ -762,6 +1040,10 @@ class Scheduler:
             grow = need - len(self._slot_pages[b])
             if grow <= 0:
                 continue
+            if grow > self._alloc.n_free and self._prefix is not None:
+                # cache-only pages are reclaimable mid-flight: growing a
+                # live slot outranks keeping cold prefixes warm
+                self._prefix.evict(grow - self._alloc.n_free)
             try:
                 self._slot_pages[b].extend(self._alloc.alloc(grow))
             except RuntimeError as e:
@@ -842,12 +1124,17 @@ class Scheduler:
             self._slot_strength[b] = 1.0
             self._slot_tier[b] = None
             if self.paged:
-                # return the pages AND null out the slot's device table:
-                # the freed slot keeps riding the loop done-masked, and
-                # its frozen writes must land in the null page — through
-                # the stale table they would corrupt reallocated pages
+                # drop the slot's page references AND null out its device
+                # table: the freed slot keeps riding the loop done-masked,
+                # and its frozen writes must land in the null page —
+                # through the stale table they would corrupt reallocated
+                # pages.  ``free`` decrements: private pages return to the
+                # pool, prefix-shared pages survive under the cache's (or
+                # another slot's) remaining references
                 self._alloc.free(self._slot_pages[b])
                 self._slot_pages[b] = []
+                self._slot_hit_digests[b] = []
+                self._prefill_base[b] = 0
                 self.carry = self._set_table_jit(
                     self.carry, jnp.int32(b),
                     jnp.zeros((self.max_pages,), jnp.int32))
@@ -889,16 +1176,25 @@ class Scheduler:
 
     def _check_paged_deadlock(self) -> None:
         """Every slot idle + a queue that admission skipped means the head
-        prompt alone overflows the pool — waiting can never help."""
+        prompt alone overflows the pool — waiting can never help.  (With a
+        prefix cache, admission already evicted every reclaimable
+        cache-only entry outside the head's own hit chain before giving
+        up, so ``n_free`` here is post-eviction and the verdict final.)"""
         if not (self.paged and self.queue) or self._active():
             return
         req = self.queue[0]
         need = -(-len(req.prompt) // self.page_size)
+        cached = ""
+        if self._prefix is not None:
+            _, shared = self._prefix.lookup(req.prompt)
+            need -= len(shared)
+            cached = (f" ({len(shared)} prefix pages cached, "
+                      f"{self._prefix.pages_held} held by the cache)")
         raise RuntimeError(
             f"KV page pool too small: request uid={req.uid} needs {need} "
             f"pages for its {len(req.prompt)}-token prompt but only "
             f"{self._alloc.n_free} of {self.num_pages - 1} allocatable "
-            "pages exist (every slot idle) — raise num_pages")
+            f"pages exist (every slot idle){cached} — raise num_pages")
 
     def stats(self) -> Dict[str, float]:
         """Cumulative honest serving stats over flushed requests (drained
@@ -911,4 +1207,11 @@ class Scheduler:
         if self.paged:
             out["pages_used"] = float(self._alloc.n_used)
             out["pages_free"] = float(self._alloc.n_free)
+            out["pages_peak"] = float(self._alloc.n_used_peak)
+            if self._prefix is not None:
+                out["prefix_entries"] = float(self._prefix.n_entries)
+                out["prefix_pages"] = float(self._prefix.pages_held)
+                out["prefix_hits"] = float(self._prefix.hits)
+                out["prefix_misses"] = float(self._prefix.misses)
+                out["prefix_evictions"] = float(self._prefix.evictions)
         return out

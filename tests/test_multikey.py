@@ -68,6 +68,87 @@ def test_pool_explicit_key_is_refcounted_and_attributable():
     assert pool.refcount(w) == 0
 
 
+def test_pool_out_of_range_int_keys_normalize_symmetrically():
+    """Regression: ``acquire(key=...)`` normalized explicit keys through
+    ``_word_of`` while ``release`` coerced via bare ``np.uint32`` — which
+    under numpy 2 raises OverflowError for out-of-range ints instead of
+    wrapping, so a word acquired as ``2**35 + 5`` could never be
+    released.  Both paths now share one normalization (mask to the low
+    32 bits)."""
+    pool = KZ.KeyPool(1234, n_keys=2)
+    w = pool.acquire(key=2**35 + 5)
+    assert w == 5                                # masked, not raised
+    assert pool.refcount(2**35 + 5) == 1 == pool.refcount(5)
+    pool.release(2**35 + 5)                      # same word either form
+    assert pool.live_words == []
+    assert pool.acquire(key=-1) == 0xFFFFFFFF    # wraps like uint32
+    pool.release(0xFFFFFFFF)
+    assert pool.live_words == []
+    with pytest.raises(ValueError, match="release of unacquired"):
+        pool.release(2**40 + 5)                  # masks, then misses
+
+
+def test_pool_least_loaded_selection_stays_exact():
+    """The O(n) least-loaded rewrite keeps the exact semantics of the old
+    quadratic ``min``: lowest refcount wins, ties break on active-list
+    index order — checked against a brute-force oracle under churn."""
+    rng = np.random.default_rng(3)
+    pool = KZ.KeyPool(99, n_keys=7)
+    held = []
+    for _ in range(200):
+        if held and rng.random() < 0.4:
+            pool.release(held.pop(int(rng.integers(0, len(held)))))
+        else:
+            want = min(pool.active_words,
+                       key=lambda w: (pool.refcount(w),
+                                      pool.active_words.index(w)))
+            got = pool.acquire()
+            assert got == want
+            held.append(got)
+    for w in held:
+        pool.release(w)
+    assert pool.live_words == []
+
+
+class _BoomController(KZ.StrengthController):
+    """A strength controller whose backend is down — any pick raises."""
+
+    def pick(self, tier):
+        raise RuntimeError("strength backend down (boom)")
+
+
+@pytest.mark.parametrize("paged", [False, True], ids=["dense", "paged"])
+def test_admission_resolve_failure_leaks_nothing(pair, paged):
+    """Regression for the admission ordering leak: pages used to be
+    allocated (and the slot marked PREFILLING) before ``_resolve_key``,
+    so a key/tier resolution error leaked pages, stranded the slot with
+    a dead request, and — because the pool ref was acquired before the
+    tier check — leaked a KeyPool reference too.  A raising
+    ``StrengthController`` must now leave the scheduler untouched: slot
+    FREE, request still queued, zero pages and zero pool refs held."""
+    import jax
+    from repro.serve import engine as E
+    from repro.serve.scheduler import FREE, Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    pool = KZ.KeyPool(jax.random.key(7), n_keys=2)
+    kw = dict(page_size=4, num_pages=24, prefill_chunk=4) if paged else {}
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2,
+                      key=jax.random.key(1234), max_tokens=4,
+                      max_prompt_len=8, sync_every=2, key_pool=pool,
+                      strength_controller=_BoomController(), **kw)
+    sched.submit(np.arange(1, 7, dtype=np.int32), 3, tier="balanced")
+    with pytest.raises(RuntimeError, match="boom"):
+        sched.run()
+    assert all(s.phase == FREE for s in sched.slots)   # nothing stranded
+    assert pool.live_words == []                       # no pool ref leaked
+    assert len(sched.queue) == 1                       # request not eaten
+    assert not any(sched._slot_pooled)
+    if paged:
+        assert sched._alloc.n_used == 0                # no pages leaked
+        assert all(not p for p in sched._slot_pages)
+
+
 def test_pool_rotation_drains_in_flight_words():
     pool = KZ.KeyPool(1234, n_keys=2, epoch=0)
     old = pool.acquire()

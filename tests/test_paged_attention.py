@@ -229,6 +229,110 @@ def test_page_allocator_basic_and_errors():
         PageAllocator(1)                         # nothing allocatable
 
 
+def test_page_allocator_refcounts_share_and_peak():
+    """Refcounted sharing: ``share`` bumps a held page, ``free``
+    decrements, the page returns to the pool only at zero — and the
+    share/free error surface (null page, free page, over-free) stays as
+    loud as the non-shared one."""
+    from repro.serve.scheduler import PageAllocator
+    a = PageAllocator(8)
+    p1, p2 = a.alloc(2)
+    assert a.refcount(p1) == 1 and a.refcount(0) == 0
+    assert a.share(p1) == 2 and a.share(p1) == 3
+    a.free([p1]); a.free([p1])
+    assert a.refcount(p1) == 1 and a.n_used == 2   # still held
+    a.free([p1])
+    assert a.refcount(p1) == 0 and a.n_used == 1   # now returned
+    with pytest.raises(ValueError, match="double free"):
+        a.free([p1])                               # over-free raises
+    with pytest.raises(ValueError, match="sharing"):
+        a.share(p1)                                # share of a free page
+    with pytest.raises(ValueError, match="sharing"):
+        a.share(0)                                 # null page never shared
+    with pytest.raises(ValueError, match="sharing"):
+        a.share(7 + 1)                             # foreign id
+    # peak tracks distinct held pages, not references
+    assert a.n_used_peak == 2
+    a.share(p2)
+    assert a.n_used_peak == 2
+    a.alloc(3)
+    assert a.n_used_peak == 4
+
+
+def _refcount_round_trip(num_pages, ops):
+    """Drive a refcounted allocator through ops, mirroring refcounts in a
+    host-side model; ``ops``: >0 alloc(n) (one free-unit), 0 share the
+    lowest held page (its own free-unit — the cache-eviction analogue),
+    <0 free the oldest outstanding unit.  Invariants after every op:
+    model == allocator refcounts (never negative — over-frees raise
+    before corruption), null page never handed out, ``n_free + n_used ==
+    num_pages - 1``, peak monotone."""
+    from repro.serve.scheduler import PageAllocator
+    alloc = PageAllocator(num_pages)
+    refs = {}                                    # page -> expected count
+    held = []                                    # list of free-units
+    peak = 0
+    for sz in ops:
+        if sz < 0:
+            if held:
+                unit = held.pop(0)
+                alloc.free(unit)
+                for p in unit:
+                    refs[p] -= 1
+                    if refs[p] == 0:
+                        del refs[p]
+        elif sz == 0:
+            if refs:
+                p = min(refs)
+                alloc.share(p)
+                refs[p] += 1
+                held.append([p])
+        else:
+            try:
+                pages = alloc.alloc(sz)
+            except RuntimeError:
+                assert sz > alloc.n_free         # only exhaustion raises
+                continue
+            assert len(pages) == sz
+            for p in pages:
+                assert p not in refs             # no double allocation
+                refs[p] = 1
+            held.append(pages)
+        peak = max(peak, len(refs))
+        assert 0 not in refs                     # null page never issued
+        assert all(c >= 1 for c in refs.values())
+        assert {p: alloc.refcount(p) for p in refs} == refs
+        assert alloc.n_used == len(refs)
+        assert alloc.n_free + alloc.n_used == num_pages - 1
+        assert alloc.n_used_peak == peak
+    for unit in held:
+        alloc.free(unit)
+    assert alloc.n_free == num_pages - 1 and alloc.n_used == 0
+    assert sorted(alloc.alloc(num_pages - 1)) == list(range(1, num_pages))
+
+
+def test_page_allocator_refcount_numpy_stress():
+    """Always-running randomized alloc/share/free interleaving (the
+    hypothesis property below deepens this when the dev extra is
+    installed)."""
+    rng = np.random.default_rng(7)
+    for trial in range(20):
+        num_pages = int(rng.integers(2, 40))
+        ops = [int(x) for x in rng.integers(-2, 6, size=60)]
+        _refcount_round_trip(num_pages, ops)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=200, deadline=None)
+@given(num_pages=st.integers(2, 64),
+       ops=st.lists(st.integers(-2, 8), max_size=80))
+def test_page_allocator_refcount_property(num_pages, ops):
+    """Hypothesis: arbitrary interleavings of alloc/share/free/evict keep
+    refcounts exact and non-negative, never hand out the null page, hold
+    ``n_free + n_used == num_pages - 1``, and drain to a whole pool."""
+    _refcount_round_trip(num_pages, ops)
+
+
 def test_page_allocator_numpy_stress():
     """Always-running randomized admit/drain interleaving (the hypothesis
     property below deepens this when the dev extra is installed)."""
@@ -262,3 +366,50 @@ def test_page_allocator_fragmentation_stress():
         sizes = rng.choice([1, 1, 2, 3, 5, 8, 13, 31], size=400)
         ops = [int(s) if rng.random() < 0.55 else -1 for s in sizes]
         _allocator_round_trip(num_pages, ops)
+
+
+@pytest.mark.slow
+def test_page_allocator_shared_prefix_fragmentation_stress():
+    """Nightly: churn shaped like prefix-cache traffic — a few long-lived
+    "prefix chains" each shared by many short-lived "requests" that also
+    hold private tails, freed in arbitrary order.  Refcounts stay exact
+    under deep sharing and the pool reassembles completely after every
+    drain (plus a broadened random alloc/share/free sweep)."""
+    from repro.serve.scheduler import PageAllocator
+    rng = np.random.default_rng(8)
+    for trial in range(60):
+        num_pages = int(rng.integers(32, 257))
+        alloc = PageAllocator(num_pages)
+        chains = [alloc.alloc(int(rng.integers(1, 5)))
+                  for _ in range(int(rng.integers(1, 4)))]
+        requests = []
+        for _ in range(300):
+            if requests and (rng.random() < 0.45
+                             or alloc.n_free < 8):
+                shared, tail = requests.pop(int(rng.integers(
+                    0, len(requests))))
+                alloc.free(shared + tail)        # one decref per page
+            elif alloc.n_free >= 8:
+                chain = chains[int(rng.integers(0, len(chains)))]
+                shared = chain[:int(rng.integers(0, len(chain) + 1))]
+                for p in shared:
+                    alloc.share(p)
+                requests.append((list(shared),
+                                 alloc.alloc(int(rng.integers(1, 5)))))
+            # chain pages: 1 (own) + one per live sharer
+            counts = {}
+            for shared, _ in requests:
+                for p in shared:
+                    counts[p] = counts.get(p, 0) + 1
+            for chain in chains:
+                for p in chain:
+                    assert alloc.refcount(p) == 1 + counts.get(p, 0)
+            assert alloc.n_free + alloc.n_used == num_pages - 1
+        for shared, tail in requests:
+            alloc.free(shared + tail)
+        for chain in chains:                     # cache-eviction analogue
+            assert all(alloc.refcount(p) == 1 for p in chain)
+            alloc.free(chain)
+        assert alloc.n_used == 0 and alloc.n_free == num_pages - 1
+        _refcount_round_trip(num_pages,
+                             [int(x) for x in rng.integers(-2, 9, 300)])

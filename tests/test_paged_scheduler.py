@@ -224,6 +224,207 @@ def test_paged_validation_and_pool_exhaustion(pair, key):
         sched.run()
 
 
+# ---------------------------------------------------------------------------
+# Prefix-page sharing: cache-hit admissions vs solo generate()
+# ---------------------------------------------------------------------------
+
+
+def _shared_prefix_requests(rng, sysp, req_keys, *, tail=3, n_tok=5):
+    """Requests sharing one system prompt with distinct tails + per-slot
+    keys (None = the scheduler default key)."""
+    return [dict(prompt=np.concatenate(
+                [sysp, rng.integers(1, V, size=tail).astype(np.int32)]),
+                n_tokens=n_tok, key=k)
+            for k in req_keys]
+
+
+@pytest.mark.parametrize("wm", ["gumbel", "synthid"])
+def test_prefix_cache_hit_bit_exact_parity(pair, key, wm):
+    """The tentpole acceptance, single-device: admissions that hit the
+    prefix cache (a shared system prompt already resident from earlier
+    requests) run over SHARED physical KV pages — the event log proves it
+    — yet every request stays bit-identical to a solo ``generate()`` of
+    its full prompt: tokens, src/u/ctx rows, masked flags AND detection
+    records, under mixed per-slot keys (shared pages carry no key
+    material, so tenants cannot cross-contaminate)."""
+    import jax.numpy as jnp
+    from repro.core.detection import pipeline
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+    rng = np.random.default_rng(23)
+    sysp = rng.integers(1, V, size=9).astype(np.int32)  # 2 full pages @4
+    req_keys = [None, 0xA11CE, 0xB0B, None, 0xA11CE, 7]
+    reqs = _shared_prefix_requests(rng, sysp, req_keys)
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=8, max_prompt_len=16, sync_every=2,
+                      prefix_cache=True, **PAGED)
+    uids = sched.submit_many(reqs)
+    results = sched.run()
+    assert len(results) == len(reqs)
+    shared = [e for e in sched.events if e[0] == "admit_shared"]
+    # the first two admissions race a cold cache; everything after hits
+    assert len(shared) >= len(reqs) - 2, sched.events
+    assert all(e[2] == 8 for e in shared)       # both full pages resident
+    dec = E.make_decoder(scfg)
+    by_uid = {r.uid: r for r in results}
+    for uid, rq in zip(uids, reqs):
+        r = by_uid[uid]
+        solo_key = key if rq["key"] is None else rq["key"]
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(rq["prompt"])[None],
+                          n_tokens=rq["n_tokens"], key=solo_key)
+        _assert_request_matches_solo(r, solo, ctx=f"prefix {wm}")
+        rec_s = pipeline.records_from_generation(
+            r.as_generation_result(), dec, solo_key, tcfg.vocab)[0]
+        rec_r = pipeline.records_from_generation(solo, dec, solo_key,
+                                                 tcfg.vocab)[0]
+        for f in ("tokens", "y_draft", "y_target", "u", "src", "ctx"):
+            np.testing.assert_array_equal(
+                getattr(rec_s, f), getattr(rec_r, f),
+                err_msg=f"prefix {wm} req {uid} record.{f}")
+    # after the drain only the cache holds pages; clearing empties the pool
+    assert sched._alloc.n_used == sched._prefix.pages_held > 0
+    assert sched.stats()["prefix_hits"] >= 2 * (len(reqs) - 2)
+    sched._prefix.clear()
+    assert sched._alloc.n_used == 0
+
+
+def test_prefix_cache_eviction_under_pressure(pair, key):
+    """A pool too small to keep every cold prefix resident evicts LRU
+    cache-only entries instead of deadlocking or refusing mid-request
+    growth; results across the eviction churn still bit-match solo runs
+    and the pool drains whole."""
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=4, max_prompt_len=16, sync_every=2,
+                      page_size=4, num_pages=16, prefill_chunk=4,
+                      prefix_cache=True)
+    rng = np.random.default_rng(31)
+    served = []
+    for g in range(3):                    # 3 distinct system prompts
+        sysp = rng.integers(1, V, size=9).astype(np.int32)
+        reqs = _shared_prefix_requests(rng, sysp, [None, None], n_tok=3)
+        for rq in reqs:
+            served.append((sched.submit(rq["prompt"], rq["n_tokens"]),
+                           rq["prompt"]))
+        sched.run()
+    st = sched.stats()
+    assert st["prefix_evictions"] > 0, st  # pressure actually evicted
+    for uid, prompt in served:
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(prompt)[None], n_tokens=3, key=key)
+        _assert_request_matches_solo(sched.results[uid], solo,
+                                     ctx="evict churn")
+    sched._prefix.clear()
+    assert sched._alloc.n_used == 0
+
+
+def test_prefix_cache_requires_paged_mode(pair, key):
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    with pytest.raises(ValueError, match="prefix_cache"):
+        Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                  max_tokens=4, prefix_cache=True)
+
+
+@pytest.mark.slow
+def test_prefix_shared_stress_fewer_pages_full_drain(pair, key):
+    """Nightly shared-prefix stress: 200 requests over B=4 sharing 3
+    system prompts, on a pool sized far below the 200 admissions' summed
+    private footprint.  A first wave populates the cache (cold
+    admissions are private-by-construction, so the high-water mark is
+    reset after it); the steady phase must then peak at strictly fewer
+    distinct pages than the same schedule served without the cache (and
+    both far below N private allocations), drain fully with pages and
+    key-pool refs at zero, keep FIFO admission order, and stay bit-exact
+    (spot checks under the pool keys)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    from repro.serve import keys as KZ
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    N, B, ps = 200, 4, 4
+    rng = np.random.default_rng(77)
+    sys_prompts = [rng.integers(1, V, size=17).astype(np.int32)
+                   for _ in range(3)]                 # 4 full pages each
+    reqs = []
+    for i in range(N):
+        tail = rng.integers(1, V,
+                            size=int(rng.integers(1, 4))).astype(np.int32)
+        reqs.append((np.concatenate([sys_prompts[i % 3], tail]),
+                     int(rng.integers(2, 5))))
+    private_total = sum(-(-len(p) // ps) for p, _ in reqs)
+
+    def serve(prefix_cache):
+        pool = KZ.KeyPool(jax.random.key(5), n_keys=4)
+        sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=B, key=key,
+                          max_tokens=4, max_prompt_len=24, sync_every=2,
+                          page_size=ps, num_pages=64, prefill_chunk=4,
+                          prefix_cache=prefix_cache, key_pool=pool)
+        warm = 12                                 # first wave: cold misses
+        uids = [sched.submit(p, n) for p, n in reqs[:warm]]
+        sched.run()
+        # cold admissions allocate privately before their chains exist, so
+        # the warmup peak is identical in both modes — measure steady state
+        sched._alloc.n_used_peak = sched._alloc.n_used
+        uids += [sched.submit(p, n) for p, n in reqs[warm:]]
+        results = sched.run()
+        assert len(results) == N
+        assert sched.admit_order == uids          # FIFO held
+        assert pool.live_words == []              # key refs drained
+        return sched, results
+
+    cached, results = serve(True)
+    private, _ = serve(False)
+    peak_c = cached.stats()["pages_peak"]
+    peak_p = private.stats()["pages_peak"]
+    assert peak_c < peak_p, (peak_c, peak_p)      # sharing saved pages
+    assert peak_c < private_total / 4             # << N private allocs
+    assert cached.stats()["prefix_hits"] > 100
+    # full drain: only the cache still holds pages, and they clear
+    assert private.stats()["pages_used"] == 0
+    assert cached._alloc.n_used == cached._prefix.pages_held
+    cached._prefix.clear()
+    assert cached._alloc.n_used == 0 and cached._alloc.n_free == 63
+    for r in (results[0], results[97], results[199]):
+        p, n = reqs[r.uid]
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg, jnp.asarray(p)[None],
+                          n_tokens=n, key=r.key_word)
+        _assert_request_matches_solo(r, solo, ctx="prefix stress")
+
+
+def test_prefix_cache_sharded_parity():
+    """The tentpole acceptance on the mesh path: cache-hit admissions
+    with mixed per-slot keys on a forced 8-device CPU mesh bit-match
+    dense solo single-device runs, for gumbel AND synthid (subprocess:
+    XLA_FLAGS must precede jax init)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = (os.path.join(here, "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, os.path.abspath(__file__),
+                          "--prefix", "gumbel", "synthid"],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    assert out.returncode == 0, f"\n--- stdout ---\n{out.stdout}" \
+                                f"\n--- stderr ---\n{out.stderr}"
+    for wm in ("gumbel", "synthid"):
+        assert f"PAGED PREFIX SHARDED PARITY OK {wm}" in out.stdout, \
+            out.stdout
+
+
 def test_paged_slot_isolation_sharded():
     """The paged acceptance invariant on the mesh path: the same schedule
     served paged with ``mesh=`` on a forced 8-device CPU mesh is bit-equal
@@ -275,5 +476,49 @@ def _main(wms):
         print(f"PAGED SCHEDULER SHARDED PARITY OK {wm}")
 
 
+def _main_prefix(wms):
+    """Prefix-cache parity on the mesh: requests sharing one system
+    prompt under mixed explicit keys serve over shared pages (event-log
+    witness) and bit-match dense solo single-device generate()."""
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_host_mesh(data=4, model=1)
+    tcfg, dcfg, tp, dp = _make_pair()
+    key = jax.random.key(1234)
+    for wm in wms:
+        scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+        rng = np.random.default_rng(29)
+        sysp = rng.integers(1, V, size=9).astype(np.int32)
+        req_keys = [None, 0xA11CE, 0xB0B, None, 7, 0xA11CE, 0xB0B, None]
+        reqs = _shared_prefix_requests(rng, sysp, req_keys, n_tok=4)
+        sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=4, key=key,
+                          max_tokens=6, max_prompt_len=16, sync_every=2,
+                          mesh=mesh, shard_params=False,
+                          prefix_cache=True, **PAGED)
+        uids = sched.submit_many(reqs)
+        results = sched.run()
+        assert len(results) == len(reqs)
+        shared = [e for e in sched.events if e[0] == "admit_shared"]
+        assert len(shared) >= len(reqs) - 4, sched.events
+        by_uid = {r.uid: r for r in results}
+        for uid, rq in zip(uids, reqs):
+            solo_key = key if rq["key"] is None else rq["key"]
+            solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                              jnp.asarray(rq["prompt"])[None],
+                              n_tokens=rq["n_tokens"], key=solo_key)
+            _assert_request_matches_solo(by_uid[uid], solo,
+                                         ctx=f"prefix sharded {wm}")
+        print(f"PAGED PREFIX SHARDED PARITY OK {wm}")
+
+
 if __name__ == "__main__":
-    _main(sys.argv[1:] or ["gumbel"])
+    _args = sys.argv[1:] or ["gumbel"]
+    if _args[0] == "--prefix":
+        _main_prefix(_args[1:] or ["gumbel"])
+    else:
+        _main(_args)
