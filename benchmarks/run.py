@@ -17,7 +17,7 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: fig1,tab1,fig2,kernels,spec_step,"
                          "spec_step_keyed,paged_decode,prefix_cache,"
-                         "roofline")
+                         "streaming,roofline")
     ap.add_argument("--fast", action="store_true",
                     help="reduced sample counts (CI mode)")
     ap.add_argument("--quick", action="store_true",
@@ -28,7 +28,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
     if args.quick:
         only = {"kernels", "spec_step", "spec_step_keyed", "paged_decode",
-                "prefix_cache"}
+                "prefix_cache", "streaming"}
 
     def want(name):
         return only is None or name in only
@@ -76,6 +76,10 @@ def main() -> None:
         from benchmarks import spec_step_bench
         section("prefix_cache",
                 lambda: spec_step_bench.run_prefix_cache(quick=args.quick))
+    if want("streaming"):
+        from benchmarks import spec_step_bench
+        section("streaming",
+                lambda: spec_step_bench.run_streaming(quick=args.quick))
     if want("roofline"):
         from benchmarks import roofline
 

@@ -480,6 +480,179 @@ def run_prefix_cache(quick: bool = False, verbose: bool = True):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Streaming / double-buffered serving (PR 9): overlap on/off x dense/paged,
+# with a simulated per-token consumer so the host has real work to overlap.
+# ---------------------------------------------------------------------------
+
+
+class _Consumer:
+    """Streaming consumer model: records each token's stream and sleeps
+    ``delay_s`` per token — standing in for the per-token delivery work a
+    real serving frontend does off the hot path (detokenize + SSE frame +
+    socket write).  ``time.sleep`` releases the GIL, so under overlap the
+    XLA execution thread computes the in-flight chunk through the
+    consumer stall; the serialized loop pays compute + consumer in
+    sequence.  Set ``delay_s = 0`` for the null-consumer probe."""
+
+    def __init__(self, delay_s: float):
+        self.delay_s = delay_s
+        self.streams = {}
+
+    def __call__(self, uid, tok, meta):
+        self.streams.setdefault(uid, []).append(tok)
+        if self.delay_s:
+            time.sleep(self.delay_s)
+
+
+def _gap_stats(results):
+    ttfts = [r.ttft_s for r in results if r.ttft_s is not None]
+    gaps = np.concatenate([r.gaps_s for r in results
+                           if r.gaps_s is not None])
+    return (round(float(np.mean(ttfts)) * 1e3, 2),
+            round(float(np.mean(gaps)) * 1e3, 2),
+            round(float(np.percentile(gaps, 95)) * 1e3, 2))
+
+
+def run_streaming(quick: bool = False, verbose: bool = True):
+    """Double-buffered dispatch vs the serialized sync loop, streaming to
+    a consumer with ``DELAY_MS`` per-token latency.  Lanes: overlap
+    off/on x dense/paged at the headline decode config.  Every lane's
+    streamed tokens must equal its drained ``RequestResult`` tokens, and
+    the off/on (and dense/paged) streams must be bit-identical — overlap
+    only re-times the flush, it never changes a served bit.  The
+    null-consumer probe re-drains with ``delay_s = 0`` to show how much
+    of the win needs real host-side work to hide (on this CPU target the
+    device and host share cores, so pure dispatch overlap is ~1.0x).
+    Results land in artifacts/streaming_bench.json and (checked in)
+    BENCH_streaming.json."""
+    from repro.serve.scheduler import Scheduler
+    # decode-dominated requests: the one-chunk flush/admission lag of
+    # overlap mode costs one sync round per slot wave, so the win needs
+    # requests long enough to amortize it (n_dec >> sync_every * (K+1))
+    if quick:
+        B, K, V, n_dec, n_req = 4, 4, 4096, 24, 8
+    else:
+        B, K, V, n_dec, n_req = 8, 4, 32000, 128, 16
+    S, sync_every, delay_ms = 8, 4, 1.5
+    key = jax.random.key(7)
+    tcfg, dcfg, tp, dp = _pair(V)
+    scfg = E.SpecConfig(K=K, watermark="gumbel")
+    rng = np.random.default_rng(29)
+    reqs = [(rng.integers(1, V, size=S).astype(np.int32), n_dec)
+            for _ in range(n_req)]
+    ps = 16
+    max_seq = S + 1 + (K + 1) * n_dec + 2
+    paged_kw = dict(page_size=ps,
+                    num_pages=B * (-(-max_seq // ps)) + 4,
+                    prefill_chunk=8)
+
+    def lane(paged, overlap):
+        consumer = _Consumer(delay_ms * 1e-3)
+        sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=B, key=key,
+                          max_tokens=n_dec, max_prompt_len=S,
+                          sync_every=sync_every, overlap=overlap,
+                          on_token=consumer,
+                          **(paged_kw if paged else {}))
+        for p, n in reqs:
+            sched.submit(p, n)
+        sched.run()                               # cold drain (compiles)
+        consumer.streams = {}
+        uids = [sched.submit(p, n) for p, n in reqs]
+        t0 = time.perf_counter()
+        sched.run()
+        dt = time.perf_counter() - t0
+        res = [sched.results[u] for u in uids]
+        streams, consumer.streams = consumer.streams, {}
+        consumer.delay_s = 0.0                    # null-consumer probe
+        for p, n in reqs:
+            sched.submit(p, n)
+        t0 = time.perf_counter()
+        sched.run()
+        dt_null = time.perf_counter() - t0
+        drained_ok = all(
+            np.array_equal(np.asarray(streams[r.uid]), r.tokens)
+            for r in res)
+        return streams, res, dt, dt_null, drained_ok
+
+    rows = []
+    dense_streams = None
+    for mode in ("dense", "paged"):
+        paged = mode == "paged"
+        s_off, r_off, dt_off, null_off, ok_off = lane(paged, False)
+        s_on, r_on, dt_on, null_on, ok_on = lane(paged, True)
+        identical = (ok_off and ok_on
+                     and set(s_off) == set(s_on)
+                     and all(s_off[u] == s_on[u] for u in s_off))
+        if dense_streams is None:
+            dense_streams = s_off
+        else:
+            identical = identical and all(
+                dense_streams[u] == s_off[u] for u in s_off)
+        tot = sum(r.length for r in r_on)
+        ttft_off, gap_off, p95_off = _gap_stats(r_off)
+        ttft_on, gap_on, p95_on = _gap_stats(r_on)
+        rows.append({
+            "mode": mode, "B": B, "K": K, "V": V, "n_tokens": n_dec,
+            "n_requests": n_req, "sync_every": sync_every,
+            "consumer_latency_ms": delay_ms,
+            "tok_per_s_overlap_off": round(tot / dt_off, 1),
+            "tok_per_s_overlap_on": round(tot / dt_on, 1),
+            "overlap_speedup": round(dt_off / dt_on, 3),
+            "ttft_ms_overlap_off": ttft_off,
+            "ttft_ms_overlap_on": ttft_on,
+            "gap_mean_ms_overlap_off": gap_off,
+            "gap_mean_ms_overlap_on": gap_on,
+            "gap_p95_ms_overlap_off": p95_off,
+            "gap_p95_ms_overlap_on": p95_on,
+            "null_consumer_speedup": round(null_off / null_on, 3),
+            "identical_tokens": bool(identical),
+        })
+        if verbose:
+            r = rows[-1]
+            print(f"streaming,{mode},B={B},K={K},V={V},"
+                  f"off={r['tok_per_s_overlap_off']}tok/s,"
+                  f"on={r['tok_per_s_overlap_on']}tok/s,"
+                  f"x{r['overlap_speedup']},"
+                  f"null_x{r['null_consumer_speedup']},"
+                  f"gap={r['gap_mean_ms_overlap_off']}->"
+                  f"{r['gap_mean_ms_overlap_on']}ms,"
+                  f"exact={r['identical_tokens']}", flush=True)
+    os.makedirs(ART, exist_ok=True)
+    out = {"note": "double-buffered dispatch (overlap on) vs the "
+                   "serialized sync loop (off), streaming every token to "
+                   "a consumer with consumer_latency_ms simulated "
+                   "per-token delivery latency (detokenize + SSE frame + "
+                   "socket write stand-in; time.sleep releases the GIL so "
+                   "the XLA execution thread computes the in-flight chunk "
+                   "through the stall).  Timed drains reuse warm jits; "
+                   "tok/s counts committed tokens over the full drain "
+                   "wall.  Overlap trades a one-chunk flush/admission lag "
+                   "(a finished slot idles one extra sync round before "
+                   "its successor is admitted) for hiding all host work "
+                   "behind device compute, so the headline uses "
+                   "decode-dominated requests (n_tokens >> sync_every x "
+                   "(K+1)) that amortize the per-wave lag — short-request "
+                   "workloads should serve with overlap off.  "
+                   "null_consumer_speedup re-drains with a 0-delay "
+                   "consumer: on this single-core CPU target host and "
+                   "device share the core, so pure dispatch overlap "
+                   "cannot beat 1.0x there and the residual lag cost "
+                   "shows — the win is hiding real host-side consumer "
+                   "work behind device compute.  Token streams are "
+                   "asserted bit-identical across overlap off/on, "
+                   "dense/paged, and streamed-vs-drained "
+                   "(identical_tokens).  CPU measurement mode",
+           "rows": rows}
+    with open(os.path.join(ART, "streaming_bench.json"), "w") as f:
+        json.dump(out, f, indent=1)
+    if not quick:
+        root = os.path.join(os.path.dirname(__file__), "..")
+        with open(os.path.join(root, "BENCH_streaming.json"), "w") as f:
+            json.dump(out, f, indent=1)
+    return rows
+
+
 if __name__ == "__main__":
     import sys
     quick = "--quick" in sys.argv
@@ -487,3 +660,4 @@ if __name__ == "__main__":
         run(quick=quick)
     run_paged(quick=quick)
     run_prefix_cache(quick=quick)
+    run_streaming(quick=quick)

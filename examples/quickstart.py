@@ -7,6 +7,11 @@
    unwatermarked text.
 
     PYTHONPATH=src python examples/quickstart.py
+
+From here: ``examples/serve_watermarked.py --continuous N --stream``
+serves a request queue through the continuous-batching scheduler and
+streams each token as it commits (``repro.launch.serve`` exposes the
+same via ``--stream`` / ``--overlap``); see docs/serving.md.
 """
 import os
 import sys

@@ -26,7 +26,17 @@ prompt into a freed slot at every sync point of the device-resident loop
     for r in results:          # uid (submission) order
         r.tokens, r.src, r.u   # bit-identical to a solo generate() of
         r.aatps                #   the same prompt/key (slot isolation)
+        r.ttft_s, r.gaps_s     # per-request streaming latency metrics
         r.as_generation_result()   # feeds pipeline.records_from_generation
+
+Tokens can also be **streamed** as they commit instead of drained at the
+end: pass ``on_token=lambda uid, tok, meta: ...`` (fires per token at
+each sync point; ``meta["final"]`` marks a request's last token), or use
+the async-iterator form ``engine.serve_stream(...)`` which additionally
+double-buffers the dispatch (``overlap=True``) so the host streams chunk
+N while the device computes chunk N+1.  ``--stream`` below demos the
+callback; ``launch/serve.py`` exposes the same via ``--stream`` /
+``--overlap``.  See docs/serving.md "Streaming & overlap".
 
 Per-request outputs (tokens, provenance ``src``, coins ``u``, context
 hashes, masks — everything detection needs) are bit-identical to a solo
@@ -70,23 +80,37 @@ def serve(tcfg, dcfg, tp, dp, cp, scfg, *, n_batches, batch, n_tokens,
 
 
 def serve_continuous(tcfg, dcfg, tp, dp, cp, scfg, *, n_requests, batch,
-                     key, rng_seed=1234):
+                     key, rng_seed=1234, stream=False):
     """Mixed-length request stream through the continuous-batching
-    scheduler — the 'many concurrent users' deployment."""
+    scheduler — the 'many concurrent users' deployment.  With
+    ``stream=True`` every token is printed the moment it surfaces at a
+    sync point (``on_token``) and the report adds TTFT / inter-token-gap
+    means from the scheduler's timing records."""
     rng = np.random.default_rng(rng_seed)
     reqs = []
     for i in range(n_requests):
         prompt = common.bench_prompts(cp, 1, seed=900 + i)[0]
         reqs.append((np.asarray(prompt), int(rng.integers(8, 33))))
+    on_token = None
+    if stream:
+        def on_token(uid, tok, meta):
+            tail = " <end>" if meta["final"] else ""
+            print(f"  stream uid={uid} i={meta['index']} tok={tok}{tail}")
+    stats = {}
     t0 = time.perf_counter()
     results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=batch,
-                               key=key, sync_every=4)
+                               key=key, sync_every=4, on_token=on_token,
+                               stats_out=stats)
     dt = time.perf_counter() - t0
     tot = sum(r.length for r in results)
     alive = sum(r.alive_steps for r in results)
     acc = sum(r.n_accepted for r in results)
-    return {"requests": len(results), "tokens": tot,
-            "aatps": acc / max(alive, 1), "tok_per_s": tot / dt}
+    out = {"requests": len(results), "tokens": tot,
+           "aatps": acc / max(alive, 1), "tok_per_s": tot / dt}
+    if stream and "ttft_mean_s" in stats:
+        out["ttft_ms"] = stats["ttft_mean_s"] * 1e3
+        out["gap_ms"] = stats.get("gap_mean_s", 0.0) * 1e3
+    return out
 
 
 def main():
@@ -105,6 +129,10 @@ def main():
                          "Gumbel race or the synthid tournament)")
     ap.add_argument("--m", type=int, default=30,
                     help="synthid tournament rounds")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each token of the --continuous demo as "
+                         "it surfaces at a sync point (on_token), and "
+                         "report TTFT / inter-token-gap means")
     args = ap.parse_args()
 
     tcfg, dcfg, tp, dp, cp = common.train_pair()
@@ -145,11 +173,16 @@ def main():
             tcfg, dcfg, tp, dp, cp,
             E.SpecConfig(K=args.k, watermark=args.watermark, m=args.m,
                          temperature=0.9, ctx_window=8),
-            n_requests=args.continuous, batch=args.batch, key=key)
-        print(f"Continuous batch. ({args.watermark}): "
-              f"{cb['requests']} requests  "
-              f"AATPS={cb['aatps']:.3f}  "
-              f"throughput={cb['tok_per_s']:.1f} tok/s")
+            n_requests=args.continuous, batch=args.batch, key=key,
+            stream=args.stream)
+        line = (f"Continuous batch. ({args.watermark}): "
+                f"{cb['requests']} requests  "
+                f"AATPS={cb['aatps']:.3f}  "
+                f"throughput={cb['tok_per_s']:.1f} tok/s")
+        if "ttft_ms" in cb:
+            line += (f"  TTFT={cb['ttft_ms']:.1f}ms  "
+                     f"gap={cb['gap_ms']:.1f}ms")
+        print(line)
 
 
 if __name__ == "__main__":

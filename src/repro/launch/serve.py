@@ -30,6 +30,13 @@ launch key.  The replay report prints each request's 8-hex key
 fingerprint — the only key identifier that ever leaves the process.
 Unknown request fields are a hard error (a typo must not silently serve
 under default keying).
+
+Streaming & overlap: ``--stream`` prints every token as it surfaces at a
+sync point (the ``on_token`` consumer surface) and the replay report
+always includes per-request TTFT / inter-token-gap aggregates plus the
+prefix-cache hit/saved/eviction counters; ``--overlap`` double-buffers
+the loop (dispatch chunk N+1 before flushing chunk N — same served
+bits, see docs/serving.md).
 """
 from __future__ import annotations
 
@@ -92,6 +99,17 @@ def main():
                          "requests via refcounted KV pages; requires "
                          "--page-size/--num-pages; results stay "
                          "bit-identical to solo generation")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each token as it surfaces at a sync "
+                         "point (uid=.. i=.. tok=..) — the on_token "
+                         "consumer surface; the replay report gains "
+                         "TTFT / inter-token-gap aggregates either way")
+    ap.add_argument("--overlap", action="store_true",
+                    help="double-buffer the serving loop: dispatch the "
+                         "next decode chunk before the host-side "
+                         "flush/admission of the previous one (served "
+                         "bits unchanged; paged pools need the doubled "
+                         "page-growth horizon — see docs/serving.md)")
     args = ap.parse_args()
 
     if args.devices:
@@ -186,6 +204,13 @@ def main():
             # the paper curve
             ctrl = KZ.StrengthController(decoder_name=args.watermark,
                                          n_seeds=4000, n_gamma=9)
+        on_token = None
+        if args.stream:
+            def on_token(uid, tok, meta):
+                fin = " final" if meta["final"] else ""
+                print(f"  stream uid={uid} i={meta['index']} tok={tok} "
+                      f"t={meta['t_rel_s']:.3f}s{fin}")
+        stats: dict = {}
         results = E.serve_requests(
             t_params, d_params, tcfg, dcfg, scfg, reqs, batch=args.batch,
             key=key, eos_id=eos, sync_every=args.sync_every, mesh=mesh,
@@ -193,7 +218,8 @@ def main():
             num_pages=args.num_pages or None,
             prefill_chunk=args.prefill_chunk if args.page_size else None,
             prefix_cache=args.prefix_cache,
-            key_pool=pool, strength_controller=ctrl)
+            key_pool=pool, strength_controller=ctrl,
+            overlap=args.overlap, on_token=on_token, stats_out=stats)
         tot = sum(r.length for r in results)
         alive = sum(r.alive_steps for r in results)
         acc = sum(r.n_accepted for r in results)
@@ -204,9 +230,23 @@ def main():
         pooled = f" key-pool={args.key_pool}" if args.key_pool else ""
         print(f"arch={args.arch} watermark={args.watermark} "
               f"continuous batching{paged}{pooled}: {len(results)} "
-              f"requests over {args.batch} slots")
+              f"requests over {args.batch} slots"
+              + (" [overlap]" if args.overlap else ""))
         print(f"AATPS={acc / max(alive, 1):.3f} tokens={tot} "
               f"alive-slot-steps={alive}")
+        if "ttft_mean_s" in stats:
+            gap = (f" gap mean={stats['gap_mean_s'] * 1e3:.1f}ms "
+                   f"p95={stats['gap_p95_s'] * 1e3:.1f}ms"
+                   if "gap_mean_s" in stats else "")
+            print(f"TTFT mean={stats['ttft_mean_s'] * 1e3:.1f}ms{gap} "
+                  "(first-serve wall clock, compile included)")
+        if "prefix_hits" in stats:
+            print(f"prefix cache: hits={stats['prefix_hits']:.0f} "
+                  f"misses={stats['prefix_misses']:.0f} "
+                  f"pages-saved={stats['prefix_pages_saved']:.0f} "
+                  f"evictions={stats['prefix_evictions']:.0f} "
+                  f"(entries={stats['prefix_entries']:.0f}, "
+                  f"pages held={stats['prefix_pages']:.0f})")
         for r in results[:8]:
             tail = " eos" if r.eos else ""
             tier = f" tier={r.tier}" if r.tier else ""

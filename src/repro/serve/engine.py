@@ -1188,7 +1188,9 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                    num_pages: Optional[int] = None,
                    prefill_chunk: Optional[int] = None,
                    prefix_cache: bool = False,
-                   key_pool=None, strength_controller=None):
+                   key_pool=None, strength_controller=None,
+                   overlap: bool = False, on_token=None, on_result=None,
+                   stats_out: Optional[dict] = None):
     """Continuous batching: serve a whole request list through ``batch``
     live slots, admitting queued prompts into freed slots at sync points
     of the device-resident loop (see ``serve.scheduler``).
@@ -1219,6 +1221,17 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
     strength/efficiency Pareto curve (``core.tradeoff``).  Without a pool
     every request serves under ``key`` at full strength — bit-identical to
     the single-tenant engine.
+
+    Streaming & overlap: ``on_token(uid, token, meta)`` fires as tokens
+    surface at sync points (``on_result(RequestResult)`` per flushed
+    request); ``overlap=True`` double-buffers the loop — the next decode
+    chunk dispatches before the round's host work, hiding flush/admission
+    behind device compute at a one-chunk token-visibility latency (served
+    bits unchanged; see ``docs/serving.md``).  Per-request TTFT and
+    inter-token gaps land on every ``RequestResult``; pass ``stats_out={}``
+    to receive the scheduler's aggregate ``stats()`` (TTFT/gap means,
+    prefix-cache hit/saved/eviction counters, page-pool peaks).  For an
+    async-iterator surface use ``serve_stream``.
     """
     from repro.serve.scheduler import Scheduler, as_request
 
@@ -1234,6 +1247,64 @@ def serve_requests(t_params, d_params, tcfg: ModelConfig, dcfg: ModelConfig,
                       shard_params=shard_params, page_size=page_size,
                       num_pages=num_pages, prefill_chunk=prefill_chunk,
                       prefix_cache=prefix_cache, key_pool=key_pool,
-                      strength_controller=strength_controller)
+                      strength_controller=strength_controller,
+                      overlap=overlap, on_token=on_token,
+                      on_result=on_result)
     sched.submit_many(reqs)
-    return sched.run()
+    results = sched.run()
+    if stats_out is not None:
+        stats_out.update(sched.stats())
+    return results
+
+
+async def serve_stream(t_params, d_params, tcfg: ModelConfig,
+                       dcfg: ModelConfig, scfg: SpecConfig, requests, *,
+                       batch: int, key, max_tokens: Optional[int] = None,
+                       max_prompt_len: Optional[int] = None,
+                       eos_id: Optional[int] = None, sync_every: int = 8,
+                       mesh=None, shard_params: bool = True,
+                       page_size: Optional[int] = None,
+                       num_pages: Optional[int] = None,
+                       prefill_chunk: Optional[int] = None,
+                       prefix_cache: bool = False,
+                       key_pool=None, strength_controller=None,
+                       overlap: bool = True, on_result=None,
+                       stats_out: Optional[dict] = None):
+    """Async-iterator variant of ``serve_requests``: yields ``(uid,
+    token, step_meta)`` as slots progress, awaiting between sync rounds
+    so other coroutines (response writers, new-request intake) interleave
+    with serving.  ``overlap`` defaults on — a streaming consumer is
+    latency-shaped, and the double-buffered loop hides host work behind
+    the in-flight chunk (pass ``overlap=False`` for the strict sequential
+    schedule, e.g. on paged pools sized without the doubled growth
+    horizon).  Completed ``RequestResult``s arrive through ``on_result``
+    (fired at each flush) and aggregate timing/cache counters through
+    ``stats_out``, as in ``serve_requests``; the yielded token streams
+    are bit-identical to those drained results."""
+    import asyncio
+
+    from repro.serve.scheduler import Scheduler, as_request
+
+    reqs = [as_request(r) for r in requests]
+    if not reqs:
+        return
+    max_tokens = max_tokens or max(r.n_tokens for r in reqs)
+    max_prompt_len = max_prompt_len or max(len(r.prompt) for r in reqs)
+    sched = Scheduler(t_params, d_params, tcfg, dcfg, scfg, batch=batch,
+                      key=key, max_tokens=max_tokens,
+                      max_prompt_len=max_prompt_len, eos_id=eos_id,
+                      sync_every=sync_every, mesh=mesh,
+                      shard_params=shard_params, page_size=page_size,
+                      num_pages=num_pages, prefill_chunk=prefill_chunk,
+                      prefix_cache=prefix_cache, key_pool=key_pool,
+                      strength_controller=strength_controller,
+                      overlap=overlap, on_result=on_result)
+    sched.submit_many(reqs)
+    last_round = 0
+    for ev in sched.run_stream():
+        yield ev
+        if ev[2]["round"] != last_round:
+            last_round = ev[2]["round"]
+            await asyncio.sleep(0)
+    if stats_out is not None:
+        stats_out.update(sched.stats())

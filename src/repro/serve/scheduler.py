@@ -78,8 +78,10 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import time
 from collections import OrderedDict, deque
-from typing import Any, Deque, Dict, List, Optional, Sequence, Set
+from typing import (Any, Callable, Deque, Dict, Iterator, List, Optional,
+                    Sequence, Set, Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -165,6 +167,18 @@ class RequestResult:
     #                                         request was served under
     strength: float = 1.0                   # gamma the request ran at
     tier: Optional[str] = None              # strength class, when given
+    ttft_s: Optional[float] = None          # submit -> first token visible
+    #                                         at a sync point (host wall)
+    arrivals_s: Optional[np.ndarray] = None  # (n,) per-token visibility
+    #   times relative to submit; tokens surfacing in the same sync round
+    #   share a timestamp, so gaps within a round are 0
+
+    @property
+    def gaps_s(self) -> Optional[np.ndarray]:
+        """Inter-token gaps (n-1,); non-negative by construction."""
+        if self.arrivals_s is None or len(self.arrivals_s) < 2:
+            return None
+        return np.diff(self.arrivals_s)
 
     @property
     def key_fingerprint(self) -> Optional[str]:
@@ -330,6 +344,9 @@ class PrefixCache:
         self.hits = 0          # blocks served from cache, cumulative
         self.misses = 0        # share-eligible blocks prefilled privately
         self.evictions = 0     # entries evicted, cumulative
+        self.pages_saved = 0   # pages an admission shared instead of
+        #                        allocating + prefilling (bumped by the
+        #                        scheduler at admit time, not on lookups)
 
     # -- introspection -----------------------------------------------------
 
@@ -519,7 +536,19 @@ class Scheduler:
     whose prompts repeat a cached page-aligned prefix skip its prefill
     entirely and reference the resident pages; flush drops references
     instead of freeing, and cold cache entries are evicted LRU when the
-    pool runs short."""
+    pool runs short.
+
+    **Streaming & overlap** (``docs/serving.md``): every sync round makes
+    ONE batched host transfer (flags + the live slots' buffer rows) and
+    surfaces newly committed tokens through ``on_token`` /
+    ``run_stream()`` before flushing; per-request TTFT and inter-token
+    gaps land in ``RequestResult`` and ``stats()``.  ``overlap=True``
+    dispatches the next decode chunk *before* the round's host work and
+    snapshots the chunk's input instead of its output: the device
+    computes while the host streams/flushes/admits, at the cost of
+    one-chunk token-visibility latency and a doubled paged page-growth
+    horizon (size ``num_pages`` accordingly).  Served bits are identical
+    either way — admission still lands only between chunks."""
 
     def __init__(self, t_params, d_params, tcfg: ModelConfig,
                  dcfg: ModelConfig, scfg: E.SpecConfig, *, batch: int,
@@ -530,7 +559,10 @@ class Scheduler:
                  num_pages: Optional[int] = None,
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
-                 key_pool=None, strength_controller=None):
+                 key_pool=None, strength_controller=None,
+                 overlap: bool = False,
+                 on_token: Optional[Callable[[int, int, dict], None]] = None,
+                 on_result: Optional[Callable[[RequestResult], None]] = None):
         if scfg.accept != "pseudorandom":
             raise ValueError(
                 "continuous batching requires accept='pseudorandom': "
@@ -565,9 +597,22 @@ class Scheduler:
         self.eos_id = eos_id
         self.sync_every = sync_every
         self.mesh = mesh
+        self.overlap = bool(overlap)
+        self.on_token = on_token
+        self.on_result = on_result
         K1 = scfg.K + 1
         self.max_seq = max_prompt_len + 1 + K1 * max_tokens + 2
         self.cap = max_tokens + K1 + 1
+        # streaming/timing state: tokens already surfaced per slot, host
+        # mirrors of the last snapshot's pos/done (what _ensure_pages
+        # plans from — no extra device polls), submit times and per-token
+        # visibility times keyed by uid
+        self._streamed = np.zeros((batch,), np.int64)
+        self._pos_host = np.zeros((batch,), np.int64)
+        self._done_host = np.zeros((batch,), bool)
+        self._t_submit: Dict[int, float] = {}
+        self._arrivals: Dict[int, List[float]] = {}
+        self.n_rounds = 0
 
         self.paged = page_size is not None
         if self.paged:
@@ -663,6 +708,10 @@ class Scheduler:
             self._loop = E._jitted_gen_loop(tcfg, dcfg, scfg)
             self.t_params, self.d_params = t_params, d_params
         self._admit_jit = jax.jit(self._admit_fn)
+        # one (traced-slot) row gather shared by every snapshot: compiles
+        # once, so per-round transfers never trigger per-length slice
+        # compiles the way the old `carry["toks"][b, :n]` fetches did
+        self._row_jit = jax.jit(self._row_fn)
         if self.paged:
             # each compiles exactly once: fixed (prefill_chunk,) /
             # (max_pages,) shapes regardless of prompt length
@@ -695,6 +744,7 @@ class Scheduler:
         self._next_uid = max(self._next_uid, uid) + 1
         self.queue.append(Request(prompt=prompt, n_tokens=int(n_tokens),
                                   uid=uid, key=key, tier=tier))
+        self._t_submit[uid] = time.perf_counter()
         self._total_target += int(n_tokens)
         if self.paged:
             self._total_chunks += -(-len(prompt) // self.prefill_chunk)
@@ -802,6 +852,8 @@ class Scheduler:
                                          jnp.int32(req.n_tokens))
             self.n_tok[b] = req.n_tokens
             slot.phase = DECODING
+            self._streamed[b] = 0
+            self._done_host[b] = False
             self.admit_order.append(req.uid)
             n += 1
         return n
@@ -968,6 +1020,7 @@ class Scheduler:
             slot.phase, slot.request = PREFILLING, req
             self._chunk_cursor[b] = 0
             if shared:
+                self._prefix.pages_saved += len(shared)
                 self.events.append(
                     ("admit_shared", req.uid, int(self._prefill_base[b])))
             n += 1
@@ -1011,6 +1064,11 @@ class Scheduler:
                 jnp.int32(req.n_tokens))
             self.n_tok[b] = req.n_tokens
             slot.phase = DECODING
+            self._streamed[b] = 0
+            # finalize leaves pos at the host-known S0: _ensure_pages can
+            # plan the slot's first decode chunk without a device poll
+            self._pos_host[b] = S0
+            self._done_host[b] = False
             self.admit_order.append(req.uid)
             self.events.append(("finalize", req.uid))
             if self._prefix is not None:
@@ -1025,17 +1083,23 @@ class Scheduler:
         """Grow every live DECODING slot's page run to cover the next
         decode chunk's write horizon (pos can advance ``sync_every *
         (K+1)`` and each step writes ``K`` ahead).  Mid-request pool
-        exhaustion is fatal by design — no eviction — so it raises."""
+        exhaustion is fatal by design — no eviction — so it raises.
+
+        ``pos``/``done`` come from the host mirrors of the last sync
+        round's snapshot (or the host-known ``S0`` for a slot finalized
+        this round) — no extra device polls.  Under ``overlap`` the
+        snapshot lags one in-flight chunk, so the horizon must cover TWO
+        chunks of advance; done-in-flight slots may grow a page or two
+        spuriously, which the flush frees one round later."""
         if not any(s.phase == DECODING for s in self.slots):
             return
-        pos = np.asarray(jax.device_get(
-            self.carry["state"]["t_cache"]["pos"]))
-        done = np.asarray(jax.device_get(self.carry["done"]))
+        pos, done = self._pos_host, self._done_host
         K1 = self.scfg.K + 1
+        chunks_ahead = 2 if self.overlap else 1
         for b, slot in enumerate(self.slots):
             if slot.phase != DECODING or bool(done[b]):
                 continue
-            horizon = int(pos[b]) + (self.sync_every + 1) * K1
+            horizon = int(pos[b]) + (chunks_ahead * self.sync_every + 1) * K1
             need = min(-(-horizon // self.page_size), self.max_pages)
             grow = need - len(self._slot_pages[b])
             if grow <= 0:
@@ -1060,47 +1124,119 @@ class Scheduler:
 
     def _run_chunk(self):
         """Advance the jitted loop by up to ``sync_every`` steps (it exits
-        earlier when every live slot drains)."""
-        n0 = int(np.asarray(self.carry["n_steps"]))
+        earlier when every live slot drains).  The step limit is computed
+        on device (``n_steps + sync_every``) so dispatching a chunk never
+        blocks on the previous chunk's host sync — the enabler for
+        ``overlap`` mode, and one less device round-trip without it."""
         n_tok = jnp.asarray(self.n_tok)
-        limit = jnp.int32(n0 + self.sync_every)
+        limit = (self.carry["n_steps"] + self.sync_every).astype(jnp.int32)
         if self.mesh is not None:
             rep = NamedSharding(self.mesh, P())
             n_tok = jax.device_put(n_tok, rep)
-            limit = jax.device_put(limit, rep)
         self.carry = self._loop(self.t_params, self.d_params, self.carry,
                                 n_tok, self._eos, limit)
 
+    # -- sync-point snapshot (one batched transfer per round) --------------
+
+    _ROW_KEYS = ("toks", "fd", "us", "chs", "msk", "yd", "yt")
+    _FLAG_KEYS = ("done", "eos", "lens", "total", "acc_total",
+                  "alive_steps")
+
+    def _row_fn(self, carry, b):
+        """Jitted (compiles once — ``b`` is traced): slot ``b``'s full
+        output/detection buffer rows.  Full-width rows, not ``[:lens]``
+        slices: the host trims with the ``lens`` that arrives in the same
+        batched transfer, and a fixed shape avoids one XLA slice compile
+        per distinct committed length."""
+        return {k: jax.lax.dynamic_index_in_dim(carry[k], b, axis=0,
+                                                keepdims=False)
+                for k in self._ROW_KEYS}
+
+    def _snap_handles(self, carry) -> Dict[str, Any]:
+        """Device handles for one sync round's host view: the (B,) flag
+        vectors (+ paged ``pos``) and the full buffer rows of every
+        DECODING slot — live rows only, never a full-buffer gather.
+        Dispatch-only (no transfer): under ``overlap`` these gathers are
+        enqueued *before* the next chunk, so fetching them never waits on
+        the in-flight loop."""
+        flags = {k: carry[k] for k in self._FLAG_KEYS}
+        if self.paged:
+            flags["pos"] = carry["state"]["t_cache"]["pos"]
+        rows = {b: self._row_jit(carry, jnp.int32(b))
+                for b, s in enumerate(self.slots) if s.phase == DECODING}
+        return {"flags": flags, "rows": rows}
+
+    def _take_snapshot(self, handles) -> Dict[str, Any]:
+        """The round's ONE batched host transfer, plus host-mirror
+        maintenance (``pos``/``done`` for ``_ensure_pages``)."""
+        snap = jax.device_get(handles)
+        flags = snap["flags"]
+        if self.paged:
+            self._pos_host[:] = np.asarray(flags["pos"])
+        self._done_host[:] = np.asarray(flags["done"])
+        return snap
+
+    def _stream_events(self, snap, t_now: float
+                       ) -> Iterator[Tuple[int, int, dict]]:
+        """Surface every token the snapshot newly committed, in slot
+        order: record its visibility time, fire ``on_token``, and yield
+        ``(uid, token, meta)``.  Runs before ``_flush`` on the same
+        snapshot, so a request's last token streams before its
+        ``RequestResult`` exists."""
+        flags = snap["flags"]
+        for b, slot in enumerate(self.slots):
+            if slot.phase != DECODING or b not in snap["rows"]:
+                continue
+            n = int(flags["lens"][b])
+            start = int(self._streamed[b])
+            if n <= start:
+                continue
+            uid = slot.request.uid
+            toks = snap["rows"][b]["toks"]
+            done = bool(flags["done"][b])
+            t_rel = t_now - self._t_submit[uid]
+            arr = self._arrivals.setdefault(uid, [])
+            for i in range(start, n):
+                arr.append(t_rel)
+                meta = {"index": i, "round": self.n_rounds,
+                        "t_rel_s": t_rel,
+                        "final": done and i == n - 1}
+                if self.on_token is not None:
+                    self.on_token(uid, int(toks[i]), meta)
+                yield (uid, int(toks[i]), meta)
+            self._streamed[b] = n
+
     # -- flush (sync point) ------------------------------------------------
 
-    def _flush(self) -> List[RequestResult]:
-        """Collect every DECODING slot whose ``done`` flag is set: slice
-        its rows off the device (per-slot, no full-buffer gather), build
-        the RequestResult, free the slot."""
-        flags = jax.device_get({k: self.carry[k] for k in
-                                ("done", "eos", "lens", "total",
-                                 "acc_total", "alive_steps")})
+    def _flush(self, snap) -> List[RequestResult]:
+        """Collect every DECODING slot whose ``done`` flag is set in the
+        round's snapshot: trim its already-fetched rows, build the
+        RequestResult, free the slot.  No device transfers — everything
+        arrived in the snapshot's one batched get.  Under ``overlap`` the
+        snapshot is the in-flight chunk's *input*, so a slot finishing
+        inside that chunk flushes one round later (its snapshot rows are
+        final: the loop freezes done slots and admissions never touch
+        another slot's rows)."""
+        flags = snap["flags"]
         out: List[RequestResult] = []
         for b, slot in enumerate(self.slots):
             if slot.phase != DECODING or not bool(flags["done"][b]):
                 continue
             slot.phase = DRAINED
             n = int(flags["lens"][b])
-            row = jax.device_get({
-                "toks": self.carry["toks"][b, :n],
-                "fd": self.carry["fd"][b, :n],
-                "us": self.carry["us"][b, :n],
-                "chs": self.carry["chs"][b, :n],
-                "msk": self.carry["msk"][b, :n],
-                "yd": self.carry["yd"][b, :n],
-                "yt": self.carry["yt"][b, :n]})
+            row = {k: np.asarray(v[:n])
+                   for k, v in snap["rows"][b].items()}
             req = slot.request
+            arrivals = np.asarray(self._arrivals.pop(req.uid, []),
+                                  np.float64)
             res = RequestResult(
-                uid=req.uid, tokens=np.asarray(row["toks"]),
-                src=np.asarray(row["fd"]), u=np.asarray(row["us"]),
-                ctx_hashes=np.asarray(row["chs"]),
-                masked=np.asarray(row["msk"]), length=n,
+                uid=req.uid, tokens=row["toks"],
+                src=row["fd"], u=row["us"],
+                ctx_hashes=row["chs"],
+                masked=row["msk"], length=n,
                 eos=bool(flags["eos"][b]),
+                ttft_s=float(arrivals[0]) if len(arrivals) else None,
+                arrivals_s=arrivals if len(arrivals) else None,
                 alive_steps=int(flags["alive_steps"][b]),
                 n_accepted=int(flags["acc_total"][b]),
                 n_emitted=int(flags["total"][b]),
@@ -1117,6 +1253,11 @@ class Scheduler:
             out.append(res)
             slot.phase, slot.request = FREE, None
             self.n_tok[b] = 0
+            self._streamed[b] = 0
+            self._pos_host[b] = 0
+            self._done_host[b] = False
+            if self.on_result is not None:
+                self.on_result(res)
             if self._slot_pooled[b]:
                 self.key_pool.release(self._slot_key[b])
                 self._slot_pooled[b] = False
@@ -1146,13 +1287,33 @@ class Scheduler:
     def _active(self) -> bool:
         return any(s.phase != FREE for s in self.slots)
 
-    def run(self) -> List[RequestResult]:
-        """Drain the queue: admit → decode chunk → flush, until every
-        request completed.  Returns results in uid order."""
+    def run_stream(self) -> Iterator[Tuple[int, int, dict]]:
+        """Drain the queue, yielding ``(uid, token, meta)`` as tokens
+        surface at sync points; results land in ``self.results`` as slots
+        flush (``meta``: token ``index`` in the request's stream, sync
+        ``round``, visibility time ``t_rel_s`` relative to submit, and
+        ``final`` on a request's last token).
+
+        Per round: dispatch the next decode chunk, then do ALL host work
+        — one batched transfer, streaming, flush, admission — and only
+        then return to (maybe) wait on the device.  With ``overlap=True``
+        the transfer snapshots the chunk's *input* (already materialized:
+        it carries every admission/prefill op dispatched before the
+        chunk), so host work runs concurrently with the in-flight chunk
+        and a token becomes visible at most one chunk after it commits;
+        with ``overlap=False`` it snapshots the chunk's output — exactly
+        the strict sequential semantics, same code path.  Admission
+        scatters always land between chunks (program order on the device
+        queue), which is why overlap changes wall-clock packing but not a
+        single served bit."""
         # every round either flushes a request, admits a prompt chunk, or
         # advances >= 1 committed token on some live slot, so this bound
-        # is unreachable unless the scheduler genuinely deadlocks
+        # is unreachable unless the scheduler genuinely deadlocks; under
+        # overlap each flush wave trails the chunk that finished it by
+        # one round, hence the extra len(queue) headroom
         limit = 4 + 2 * len(self.queue) + self._total_target
+        if self.overlap:
+            limit += 1 + len(self.queue)
         if self.paged:
             limit += self._total_chunks
         rounds = 0
@@ -1160,6 +1321,7 @@ class Scheduler:
         self._check_paged_deadlock()
         while self.queue or self._active():
             rounds += 1
+            self.n_rounds = rounds
             if rounds > limit:
                 raise RuntimeError(
                     f"scheduler stalled after {rounds} sync rounds "
@@ -1168,10 +1330,27 @@ class Scheduler:
             if self.paged:
                 self._prefill_step()
                 self._ensure_pages()
-            self._run_chunk()
-            self._flush()
+            if self.overlap:
+                # gathers enqueue BEFORE the chunk: device executes them
+                # first, so the transfer below never waits on the chunk
+                handles = self._snap_handles(self.carry)
+                self._run_chunk()
+            else:
+                self._run_chunk()
+                handles = self._snap_handles(self.carry)
+            snap = self._take_snapshot(handles)
+            yield from self._stream_events(snap, time.perf_counter())
+            self._flush(snap)
             self._admit()
             self._check_paged_deadlock()
+
+    def run(self) -> List[RequestResult]:
+        """Drain the queue: admit → decode chunk → flush, until every
+        request completed.  Returns results in uid order.  (The streaming
+        surface — ``on_token`` and per-request TTFT/gap timing — is live
+        here too: ``run()`` just drains ``run_stream()``.)"""
+        for _ in self.run_stream():
+            pass
         return [self.results[uid] for uid in sorted(self.results)]
 
     def _check_paged_deadlock(self) -> None:
@@ -1204,6 +1383,16 @@ class Scheduler:
                "aatps": self._acc / denom,
                "tokens_per_step": self._emitted / denom,
                "alive_slot_steps": float(self._alive)}
+        ttfts = [r.ttft_s for r in self.results.values()
+                 if r.ttft_s is not None]
+        if ttfts:
+            out["ttft_mean_s"] = float(np.mean(ttfts))
+        gaps = [r.gaps_s for r in self.results.values()
+                if r.gaps_s is not None]
+        if gaps:
+            allg = np.concatenate(gaps)
+            out["gap_mean_s"] = float(allg.mean())
+            out["gap_p95_s"] = float(np.percentile(allg, 95))
         if self.paged:
             out["pages_used"] = float(self._alloc.n_used)
             out["pages_free"] = float(self._alloc.n_free)
@@ -1214,4 +1403,5 @@ class Scheduler:
                 out["prefix_hits"] = float(self._prefix.hits)
                 out["prefix_misses"] = float(self._prefix.misses)
                 out["prefix_evictions"] = float(self._prefix.evictions)
+                out["prefix_pages_saved"] = float(self._prefix.pages_saved)
         return out

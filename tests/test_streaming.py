@@ -1,0 +1,320 @@
+"""Streaming consumer surface + double-buffered (overlap) serving loop.
+
+The invariants:
+
+- **Streamed == drained**: tokens yielded through ``on_token`` /
+  ``run_stream()`` / ``engine.serve_stream()`` are bit-identical (order
+  per uid, values) to the drained ``RequestResult`` — for gumbel AND
+  synthid, mixed per-request keys, overlap on and off, dense and paged,
+  single-device and the forced-8-device mesh (subprocess ``__main__``
+  below, same pattern as tests/test_scheduler.py).
+- **Overlap changes no served bit**: with ``overlap=True`` the flush
+  reads the in-flight chunk's *input* snapshot, yet every request still
+  bit-matches its solo ``generate()`` (incl. detection records).
+- **One batched transfer per sync round**: the scheduler makes exactly
+  one ``jax.device_get`` call per round (flags + live rows coalesced),
+  counted via a monkeypatched ``jax.device_get``.
+- **Timing semantics** (property test): per-request arrivals are
+  monotone non-decreasing, TTFT equals the first arrival and precedes
+  the first gap's arrival, and all gaps are >= 0.
+"""
+import asyncio
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+try:
+    from tests._hyp import HAVE_HYPOTHESIS, given, settings, st
+except ImportError:     # running this file as the subprocess body
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from _hyp import HAVE_HYPOTHESIS, given, settings, st  # noqa: F401
+
+V = 96
+
+
+def _make_pair():
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    tcfg = get_smoke_config("yi-6b", vocab=V, d_model=64, d_ff=128,
+                            n_heads=2, n_kv_heads=2, head_dim=32)
+    dcfg = get_smoke_config("yi-6b", n_layers=1, vocab=V, d_model=32,
+                            d_ff=64, n_heads=2, n_kv_heads=2, head_dim=16)
+    tp = M.init_params(jax.random.key(0), tcfg)
+    dp = M.init_params(jax.random.key(1), dcfg)
+    return tcfg, dcfg, tp, dp
+
+
+@pytest.fixture(scope="module")
+def pair():
+    return _make_pair()
+
+
+@pytest.fixture(scope="module")
+def key():
+    import jax
+    return jax.random.key(1234)
+
+
+def _schedule(seed, n_requests, *, lo=4, hi=10, plen_lo=4, plen_hi=9):
+    rng = np.random.default_rng(seed)
+    return [(rng.integers(1, V, size=int(rng.integers(plen_lo, plen_hi)))
+             .astype(np.int32), int(rng.integers(lo, hi)))
+            for _ in range(n_requests)]
+
+
+def _assert_streams_match(streamed, results):
+    """Every request's streamed tokens are exactly its drained tokens."""
+    assert set(streamed) == {r.uid for r in results}
+    for r in results:
+        np.testing.assert_array_equal(
+            np.asarray(streamed[r.uid]), r.tokens,
+            err_msg=f"streamed != drained for uid {r.uid}")
+
+
+def _assert_timing(r):
+    assert r.ttft_s is not None and r.arrivals_s is not None
+    assert len(r.arrivals_s) == r.length
+    assert r.ttft_s == r.arrivals_s[0]
+    assert np.all(np.diff(r.arrivals_s) >= 0)          # monotone
+    if r.length > 1:
+        assert r.ttft_s <= r.arrivals_s[1]             # TTFT <= first gap
+        assert np.all(r.gaps_s >= 0)
+
+
+@pytest.mark.parametrize("wm,overlap", [("gumbel", False), ("gumbel", True),
+                                        ("synthid", True)])
+def test_streaming_parity_dense(pair, key, wm, overlap):
+    """on_token / run_stream yields are bit-identical to the drained
+    results; with overlap on, results (incl. detection records) still
+    bit-match solo generate() — the one-chunk-late flush reads frozen
+    rows only."""
+    import jax.numpy as jnp
+    from repro.core.detection import pipeline
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+    reqs = _schedule(7, 4)
+    streamed, yielded = {}, {}
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=12, sync_every=2, overlap=overlap,
+                      on_token=lambda u, t, m:
+                      streamed.setdefault(u, []).append(t))
+    sched.submit_many(reqs)
+    for uid, tok, meta in sched.run_stream():
+        yielded.setdefault(uid, []).append(tok)
+        assert set(meta) == {"index", "round", "t_rel_s", "final"}
+    results = [sched.results[u] for u in sorted(sched.results)]
+    assert len(results) == len(reqs)
+    _assert_streams_match(streamed, results)
+    _assert_streams_match(yielded, results)
+    dec = E.make_decoder(scfg)
+    for r, (prompt, n) in zip(results, reqs):
+        _assert_timing(r)
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(prompt)[None], n_tokens=n, key=key)
+        np.testing.assert_array_equal(r.tokens, solo.tokens[0, :r.length],
+                                      err_msg=f"overlap={overlap} uid "
+                                              f"{r.uid}")
+        rec_s = pipeline.records_from_generation(
+            r.as_generation_result(), dec, key, tcfg.vocab)[0]
+        rec_r = pipeline.records_from_generation(solo, dec, key,
+                                                 tcfg.vocab)[0]
+        for f in ("tokens", "y_draft", "y_target", "u", "src", "ctx"):
+            np.testing.assert_array_equal(getattr(rec_s, f),
+                                          getattr(rec_r, f),
+                                          err_msg=f"record.{f}")
+    agg = sched.stats()
+    assert "ttft_mean_s" in agg and "gap_mean_s" in agg \
+        and "gap_p95_s" in agg
+
+
+def test_streaming_parity_paged_prefix_mixed_keys(pair, key):
+    """The paged + prefix-cache path under overlap with mixed per-request
+    keys: streamed == drained == solo(key), prefix counters exported
+    (hits / pages-saved / evictions) through stats()."""
+    import jax.numpy as jnp
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    rng = np.random.default_rng(3)
+    sysp = rng.integers(1, V, size=9).astype(np.int32)
+    reqs = []
+    for i, kw in enumerate([None, 0xA11CE, 0xB0B, None, 0xA11CE]):
+        tail = rng.integers(1, V, size=3 + i).astype(np.int32)
+        reqs.append(dict(prompt=np.concatenate([sysp, tail]),
+                         n_tokens=5 + i, key=kw))
+    streamed = {}
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=12, sync_every=2, page_size=4,
+                      num_pages=96, prefill_chunk=4, prefix_cache=True,
+                      overlap=True,
+                      on_token=lambda u, t, m:
+                      streamed.setdefault(u, []).append(t))
+    sched.submit_many(reqs)
+    results = sched.run()
+    _assert_streams_match(streamed, results)
+    for r, req in zip(results, reqs):
+        _assert_timing(r)
+        solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                          jnp.asarray(req["prompt"])[None],
+                          n_tokens=req["n_tokens"],
+                          key=key if req["key"] is None else req["key"])
+        np.testing.assert_array_equal(r.tokens, solo.tokens[0, :r.length])
+    agg = sched.stats()
+    # 4 of 5 prompts repeat the cached 2-page system prefix
+    assert agg["prefix_hits"] >= 2 and agg["prefix_pages_saved"] >= 2
+    assert agg["prefix_pages_saved"] == sched._prefix.pages_saved
+    assert "prefix_evictions" in agg and "prefix_misses" in agg
+
+
+def test_serve_stream_async(pair, key):
+    """engine.serve_stream: the async-iterator surface yields the same
+    bit-identical streams; on_result delivers each RequestResult at
+    flush; stats_out carries the aggregates."""
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=3, watermark="gumbel")
+    reqs = _schedule(11, 4)
+    events, results, stats = [], [], {}
+
+    async def consume():
+        async for uid, tok, meta in E.serve_stream(
+                tp, dp, tcfg, dcfg, scfg, reqs, batch=2, key=key,
+                sync_every=2, max_tokens=12, on_result=results.append,
+                stats_out=stats):
+            events.append((uid, tok, meta))
+
+    asyncio.run(consume())
+    assert len(results) == len(reqs)
+    streamed = {}
+    for uid, tok, meta in events:
+        streamed.setdefault(uid, []).append(tok)
+    _assert_streams_match(streamed, results)
+    assert stats["served"] == len(reqs)
+    assert "ttft_mean_s" in stats
+    # exactly one final=True per request, and it is the last event
+    for uid in streamed:
+        metas = [m for u, _, m in events if u == uid]
+        assert metas[-1]["final"]
+        assert not any(m["final"] for m in metas[:-1])
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_one_batched_transfer_per_sync_round(pair, key, paged):
+    """Satellite regression: the scheduler's host<->device traffic is ONE
+    batched ``jax.device_get`` per sync round — flags, pos and live-slot
+    rows coalesced — with overlap on or off, dense or paged (the old code
+    made 1 flags get + 1 per flushed slot + 2 paged pos/done polls)."""
+    from repro.serve import engine as E
+    from repro.serve.scheduler import Scheduler
+    import jax
+    tcfg, dcfg, tp, dp = pair
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    kw = dict(page_size=4, num_pages=96, prefill_chunk=4) if paged else {}
+    sched = Scheduler(tp, dp, tcfg, dcfg, scfg, batch=2, key=key,
+                      max_tokens=8, sync_every=2, overlap=paged, **kw)
+    for prompt, n in _schedule(5, 5, lo=3, hi=8, plen_lo=4, plen_hi=8):
+        sched.submit(prompt, n)
+    calls = []
+    real = jax.device_get
+    jax.device_get = lambda x: (calls.append(1), real(x))[1]
+    try:
+        results = sched.run()
+    finally:
+        jax.device_get = real
+    assert len(results) == 5
+    assert len(calls) == sched.n_rounds, (len(calls), sched.n_rounds)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 2**16),
+       targets=st.lists(st.sampled_from([3, 5, 8]), min_size=3,
+                        max_size=4))
+def test_timing_property(seed, targets):
+    """Property: for arbitrary schedules under overlap, every request's
+    arrival times are monotone, TTFT == first arrival <= the first gap's
+    arrival, and every inter-token gap is >= 0."""
+    import jax
+    from repro.serve import engine as E
+    tcfg, dcfg, tp, dp = _make_pair()
+    key = jax.random.key(1234)
+    scfg = E.SpecConfig(K=2, watermark="gumbel")
+    rng = np.random.default_rng(seed)
+    reqs = [(rng.integers(1, V, size=6).astype(np.int32), n)
+            for n in targets]
+    results = E.serve_requests(tp, dp, tcfg, dcfg, scfg, reqs, batch=2,
+                               key=key, sync_every=2, max_tokens=8,
+                               overlap=True)
+    assert len(results) == len(reqs)
+    for r in results:
+        _assert_timing(r)
+
+
+def test_streaming_sharded():
+    """Streamed == drained == solo on the forced-8-device mesh, overlap
+    on and off (subprocess: XLA_FLAGS must precede jax init)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8")
+    env["PYTHONPATH"] = (os.path.join(here, "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    out = subprocess.run([sys.executable, os.path.abspath(__file__),
+                          "gumbel"],
+                         env=env, capture_output=True, text=True,
+                         timeout=1800)
+    assert out.returncode == 0, f"\n--- stdout ---\n{out.stdout}" \
+                                f"\n--- stderr ---\n{out.stderr}"
+    for overlap in (False, True):
+        assert (f"STREAMING SHARDED PARITY OK gumbel overlap={overlap}"
+                in out.stdout), out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Subprocess body: sharded streaming parity (8 fake CPU devices).
+# ---------------------------------------------------------------------------
+
+
+def _main(wms):
+    import jax
+    import jax.numpy as jnp
+    from repro.launch.mesh import make_host_mesh
+    from repro.serve import engine as E
+
+    assert len(jax.devices()) == 8, jax.devices()
+    mesh = make_host_mesh(data=4, model=1)
+    tcfg, dcfg, tp, dp = _make_pair()
+    key = jax.random.key(1234)
+    for wm in wms:
+        scfg = E.SpecConfig(K=3, watermark=wm, m=8)
+        reqs = _schedule(11, 5, lo=4, hi=10, plen_lo=6, plen_hi=7)
+        for overlap in (False, True):
+            streamed = {}
+            results = E.serve_requests(
+                tp, dp, tcfg, dcfg, scfg, reqs, batch=4, key=key,
+                sync_every=2, mesh=mesh, shard_params=False,
+                overlap=overlap,
+                on_token=lambda u, t, m:
+                streamed.setdefault(u, []).append(t))
+            assert len(results) == len(reqs)
+            _assert_streams_match(streamed, results)
+            for r, (prompt, n) in zip(results, reqs):
+                solo = E.generate(tp, dp, tcfg, dcfg, scfg,
+                                  jnp.asarray(prompt)[None], n_tokens=n,
+                                  key=key)
+                np.testing.assert_array_equal(
+                    r.tokens, solo.tokens[0, :r.length],
+                    err_msg=f"sharded overlap={overlap} uid {r.uid}")
+                assert r.ttft_s is not None
+            print(f"STREAMING SHARDED PARITY OK {wm} overlap={overlap}")
+
+
+if __name__ == "__main__":
+    _main(sys.argv[1:] or ["gumbel"])
